@@ -1,0 +1,65 @@
+"""Paper Fig 2 + Fig 5: suboptimality-over-time per implementation and
+the comparison against the MLlib-style SGD baseline.
+
+Each implementation runs at its OWN optimal H (as the paper does);
+wall-clock = measured rounds x (measured solver time x compute_mult +
+calibrated overhead).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import PROFILES
+from repro.core.baselines import MinibatchSGD, SGDConfig
+from repro.core.tradeoff import optimal_H, time_to_eps
+
+IMPLS = ("A_spark", "B_spark_c", "C_pyspark", "D_pyspark_c",
+         "B_spark_opt", "D_pyspark_opt", "E_mpi")
+
+
+def main() -> list[dict]:
+    sweep = common.run_sweep()
+    rows = []
+    for name in IMPLS:
+        p = PROFILES[name]
+        h_opt, t_opt = optimal_H(p, sweep)
+        rows.append({"impl": name, "H_opt": h_opt,
+                     "time_to_eps_s": round(t_opt, 3)})
+    by = {r["impl"]: r for r in rows}
+    t_mpi = by["E_mpi"]["time_to_eps_s"]
+    for r in rows:
+        r["gap_vs_mpi"] = round(r["time_to_eps_s"] / t_mpi, 2)
+
+    # MLlib-style SGD baseline (Fig 5), tuned batch fraction
+    A, b, _ = common.problem()
+    tr = common.trainer(64)
+    best_sgd = np.inf
+    for bf, lr in ((0.1, 3e-4), (0.5, 3e-4), (1.0, 1e-3), (1.0, 3e-3)):
+        sgd = MinibatchSGD(SGDConfig(batch_frac=bf, step_size=lr,
+                                     lam=common.LAM, K=common.K), A, b)
+        hist = sgd.run(4000, p_star=tr.p_star, p_zero=tr.p_zero,
+                       record_every=25, target_eps=common.EPS)
+        r2e = hist.rounds_to(common.EPS)
+        if r2e is not None:
+            # charge SGD the pySpark profile (it's the MLlib solver) with
+            # its n-dim gradient communication per round
+            p = PROFILES["C_pyspark"]
+            t = r2e * p.round_time(0.005, sweep.t_ref_s)
+            best_sgd = min(best_sgd, t)
+    rows.append({"impl": "MLlib_SGD(pyspark)",
+                 "H_opt": "-",
+                 "time_to_eps_s": (round(best_sgd, 1)
+                                   if np.isfinite(best_sgd) else "inf"),
+                 "gap_vs_mpi": (round(best_sgd / t_mpi, 1)
+                                if np.isfinite(best_sgd) else "inf")})
+    common.emit("fig2_fig5_convergence", rows)
+    print(f"# paper headline: (A) vs MPI ~10x -> ours "
+          f"{by['A_spark']['gap_vs_mpi']}x; optimized (B)*/(D)* < 2x -> "
+          f"ours {by['B_spark_opt']['gap_vs_mpi']}x / "
+          f"{by['D_pyspark_opt']['gap_vs_mpi']}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

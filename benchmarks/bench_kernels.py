@@ -1,0 +1,53 @@
+"""Kernel microbenchmark: Pallas SCD (interpret on CPU; compiled on TPU)
+vs the pure-jnp oracle. Prints name,us_per_call,derived CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import scd_steps_kernel, scd_steps_ref
+
+
+def _time(fn, *args, reps=5, **kw) -> float:
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for (m, n, H) in ((256, 256, 256), (512, 256, 512), (1024, 512, 1024)):
+        A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        colsq = jnp.sum(A * A, 0)
+        alpha = jnp.zeros(n, jnp.float32)
+        w = jnp.asarray(rng.standard_normal(m), jnp.float32)
+        idx = jnp.asarray(rng.integers(0, n, H), jnp.int32)
+        kw = dict(sigma=8.0, lam=1.0, eta=1.0)
+        t_ref = _time(scd_steps_ref, A, colsq, alpha, w, idx, **kw)
+        t_ker = _time(scd_steps_kernel, A, colsq, alpha, w, idx, **kw)
+        flops = 4.0 * m * H  # dot + axpy per step
+        rows.append({"name": f"scd_ref_m{m}_H{H}",
+                     "us_per_call": round(t_ref * 1e6, 1),
+                     "derived": f"{flops / t_ref / 1e9:.2f}GFLOP/s"})
+        rows.append({"name": f"scd_pallas_interp_m{m}_H{H}",
+                     "us_per_call": round(t_ker * 1e6, 1),
+                     "derived": f"{flops / t_ker / 1e9:.2f}GFLOP/s"})
+    common.emit("kernels", rows)
+    print("# NOTE: pallas numbers are interpret-mode (CPU emulation) — "
+          "correctness benchmark, not TPU speed")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

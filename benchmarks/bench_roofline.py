@@ -1,0 +1,41 @@
+"""Roofline table: reads results/roofline/*.json produced by
+`python -m repro.launch.roofline --all` (run separately with the
+512-device flag) and prints §Roofline rows."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+
+def main() -> list[dict]:
+    files = sorted(glob.glob("results/roofline/*.json"))
+    if not files:
+        print("# no roofline results found — run "
+              "`PYTHONPATH=src python -m repro.launch.roofline --all` first")
+        return []
+    rows = []
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "compute_s": "-", "memory_s": "-",
+                         "collective_s": "-", "dominant": r["status"],
+                         "useful_flops_ratio": "-"})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": round(r["compute_s"], 5),
+            "memory_s": round(r["memory_s"], 5),
+            "collective_s": round(r["collective_s"], 5),
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+        })
+    common.emit("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Fig 8: time-to-eps vs number of workers K, H re-optimized per
+point, per framework profile + the zero-overhead ideal."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import PROFILES
+from repro.core.tradeoff import optimal_H
+
+KS = (2, 4, 8, 16)
+IMPLS = ("B_spark_c", "D_pyspark_opt", "E_mpi")
+
+
+def main() -> list[dict]:
+    rows = []
+    for K_ in KS:
+        sweep = common.run_sweep(K_=K_)
+        # zero-overhead ideal (the paper's dashed line): compute only
+        ideal = min((pt.rounds_to_eps * pt.t_solver_s
+                     for pt in sweep.points if pt.rounds_to_eps), default=None)
+        for name in IMPLS:
+            h_opt, t_opt = optimal_H(PROFILES[name], sweep)
+            rows.append({"K": K_, "impl": name, "H_opt": h_opt,
+                         "time_to_eps_s": round(t_opt, 3)})
+        rows.append({"K": K_, "impl": "ideal_no_comm", "H_opt": "-",
+                     "time_to_eps_s": round(ideal, 3)})
+    common.emit("fig8_scaling", rows)
+    # scaling verdict per impl
+    for name in IMPLS + ("ideal_no_comm",):
+        ts = [r["time_to_eps_s"] for r in rows if r["impl"] == name]
+        print(f"# {name}: K=2 -> {ts[0]}s, K={KS[-1]} -> {ts[-1]}s "
+              f"(speedup {ts[0] / ts[-1]:.2f}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Shared setup for the paper-figure benchmarks.
+
+The workload mirrors the paper's webspam ridge regression at CPU-feasible
+scale (see DESIGN.md §2): K=8 workers, eps=1e-3, H in fractions of
+n_local, overhead profiles (A)-(E) calibrated to Fig 3.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import CoCoAConfig, CoCoATrainer
+from repro.core.tradeoff import HSweep, HSweepPoint, measure_solver_time
+from repro.data import make_glm_data
+
+EPS = 1e-3
+K = 8
+M, N = 512, 2048
+LAM = 1.0
+H_FRACS = (0.05, 0.2, 1.0, 4.0, 16.0)   # x n_local, the paper's Fig-6 axis
+RESULTS_DIR = os.environ.get("BENCH_OUT", "results/bench")
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    keys = list(rows[0].keys())
+    lines = [",".join(keys)]
+    for r in rows:
+        lines.append(",".join(str(r[k]) for k in keys))
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# -> {path}")
+    for line in lines:
+        print(line)
+
+
+_CACHE: dict = {}
+
+
+def problem():
+    if "data" not in _CACHE:
+        _CACHE["data"] = make_glm_data(m=M, n=N, density=0.15, zipf_a=1.1,
+                                       seed=42)
+    return _CACHE["data"]
+
+
+def n_local() -> int:
+    return N // K
+
+
+def h_grid() -> list[int]:
+    return [max(1, int(f * n_local())) for f in H_FRACS]
+
+
+def trainer(H: int, solver: str = "scd_kernel", K_: int = K,
+            seed: int = 0) -> CoCoATrainer:
+    A, b, _ = problem()
+    return CoCoATrainer(
+        CoCoAConfig(K=K_, H=H, lam=LAM, eta=1.0, solver=solver, seed=seed),
+        A, b)
+
+
+def run_sweep(K_: int = K, solver: str = "scd_kernel",
+              max_rounds: int = 1500) -> HSweep:
+    """Measured rounds-to-eps + solver wall time per H (paper Fig 6 raw).
+
+    The K virtual workers execute SERIALLY on this 1-core host, so the
+    measured per-round solver time is divided by K to model the real
+    cluster where workers run concurrently (the paper's setting).
+    """
+    A, b, _ = problem()
+    nl = int(np.ceil(N / K_))
+    sweep = HSweep(eps=EPS, n_local=nl)
+    for frac in H_FRACS:
+        H = max(1, int(frac * nl))
+        tr = trainer(H, solver, K_)
+        hist = tr.run(max_rounds, record_every=1, target_eps=EPS)
+        t_s = measure_solver_time(tr, H, reps=2) / K_
+        sweep.points.append(HSweepPoint(H, hist.rounds_to(EPS), t_s))
+    sweep.t_ref_s = measure_solver_time(trainer(nl, solver, K_), nl,
+                                        reps=2) / K_
+    return sweep

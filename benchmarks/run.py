@@ -1,0 +1,30 @@
+# One module per paper figure/table. Each prints CSV rows and writes
+# results/bench/<name>.csv; this driver runs them all.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_convergence, bench_h_sweep, bench_kernels,
+                            bench_overheads, bench_roofline, bench_scaling)
+    quick = "--quick" in sys.argv
+    stages = [
+        ("Fig3/4 overhead decomposition", bench_overheads.main),
+        ("Fig6/7 H trade-off sweep", bench_h_sweep.main),
+        ("Fig2/5 convergence vs frameworks + MLlib", bench_convergence.main),
+        ("kernel microbench", bench_kernels.main),
+        ("roofline table (from dry-run artifacts)", bench_roofline.main),
+    ]
+    if not quick:
+        stages.append(("Fig8 scaling vs workers", bench_scaling.main))
+    for name, fn in stages:
+        print(f"\n==== {name} ====")
+        t0 = time.time()
+        fn()
+        print(f"# ({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: the paper's workload end-to-end in ~a minute on CPU.
+
+Trains elastic-net ridge regression with CoCoA (Pallas-kernel local
+solver), compares the communication schemes, and shows the H trade-off
+under two framework-overhead profiles.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import CoCoAConfig, CoCoATrainer, PROFILES
+from repro.core.glm import ridge_exact
+from repro.core.tradeoff import HSweep, HSweepPoint, optimal_H
+from repro.data import make_glm_data
+
+# 1. synthetic webspam-like data, column-partitioned over 8 workers
+A, b, _ = make_glm_data(m=384, n=1024, density=0.15, seed=0)
+print(f"data: A {A.shape}, 8 workers, lam=1.0 (ridge)")
+
+# 2. CoCoA with the Pallas SCD kernel as the local solver
+cfg = CoCoAConfig(K=8, H=256, lam=1.0, eta=1.0, solver="scd_kernel")
+tr = CoCoATrainer(cfg, A, b)
+hist = tr.run(rounds=100, record_every=10, target_eps=1e-3)
+print("suboptimality trace:", [f"{s:.1e}" for s in hist.subopt])
+
+# 3. verify against the closed-form ridge solution
+alpha_star = ridge_exact(A, b, 1.0)
+rel = np.linalg.norm(tr.alpha_final - alpha_star) / np.linalg.norm(alpha_star)
+print(f"||alpha - alpha*|| / ||alpha*|| = {rel:.2e}")
+
+# 4. the paper's point: optimal H depends on the framework's overhead
+sweep = HSweep(eps=1e-3, n_local=128, t_ref_s=0.05)
+for H in (8, 32, 128, 512, 2048):
+    c = CoCoAConfig(K=8, H=H, solver="scd_ref")
+    h = CoCoATrainer(c, A, b).run(800, record_every=1, target_eps=1e-3)
+    sweep.points.append(HSweepPoint(H, h.rounds_to(1e-3), H * 4e-4))
+for name in ("E_mpi", "B_spark_c", "D_pyspark_c"):
+    h_opt, t_opt = optimal_H(PROFILES[name], sweep)
+    print(f"{name:14s} optimal H = {h_opt:5d}  time-to-1e-3 = {t_opt:7.2f}s")
+print("=> higher framework overhead pushes the optimum toward more local "
+      "computation — the paper's central result.")

@@ -1,0 +1,27 @@
+"""Serving example: batched prefill + greedy decode across families —
+dense (KV cache), SSM (recurrent state), hybrid (ring buffer + LRU).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import greedy_generate
+
+for arch in ("tinyllama-1.1b", "mamba2-2.7b", "recurrentgemma-9b"):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(1)
+    prompts = jnp.asarray(rng.integers(0, 100, (4, 24)), jnp.int32)
+    t0 = time.time()
+    out = greedy_generate(model, params, prompts, max_new=12)
+    dt = time.time() - t0
+    print(f"{arch:22s} generated {out.shape[0]}x{out.shape[1]} tokens "
+          f"in {dt:5.1f}s; sample: {np.asarray(out[0])[:8]}")
+print("all three state families (KV cache / SSM state / LRU+ring) decode OK")

@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+This instantiates tinyllama at ~100M scale (trimmed layers/width, real
+vocab), runs the full training substrate (AdamW + cosine schedule +
+per-layer remat + checkpointing), and reports the loss curve.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.checkpoint import save_checkpoint
+from repro.data.tokens import TokenStream
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import make_train_step
+from repro.utils.trees import tree_params
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+args = ap.parse_args()
+
+# ~100M-param member of the tinyllama family
+cfg = dataclasses.replace(get_config("tinyllama-1.1b"),
+                          num_layers=8, d_model=640, num_heads=10,
+                          num_kv_heads=2, head_dim=64, d_ff=1792)
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+print(f"model: {cfg.name} trimmed to {tree_params(params)/1e6:.1f}M params")
+
+opt_cfg = AdamWConfig(lr=6e-4)
+opt = adamw_init(params, opt_cfg)
+step = jax.jit(make_train_step(model, opt_cfg, remat=True))
+ts = TokenStream(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+t0 = time.time()
+first = None
+for i in range(args.steps):
+    batch = {k: jnp.asarray(v) for k, v in ts.next_batch().items()}
+    params, opt, m = step(params, opt, batch)
+    if first is None:
+        first = float(m["loss"])
+    if i % 20 == 0 or i == args.steps - 1:
+        toks = (i + 1) * args.batch * args.seq
+        print(f"step {i:4d} loss={float(m['loss']):.4f} "
+              f"acc={float(m['accuracy']):.3f} "
+              f"({toks / max(time.time() - t0, 1e-9):.0f} tok/s)")
+save_checkpoint("/tmp/train_lm_ckpt.npz", {"params": params}, step=args.steps)
+print(f"loss {first:.3f} -> {float(m['loss']):.3f}; "
+      f"checkpoint at /tmp/train_lm_ckpt.npz")
+assert float(m["loss"]) < first, "loss must decrease"

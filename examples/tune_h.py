@@ -1,0 +1,46 @@
+"""The paper's conclusion, automated: an algorithm that adapts its
+communication interval to measured system conditions.
+
+Uses the golden-section autotuner over live measurements (rounds-to-eps
+from real runs + per-round time from a framework profile), then checks
+the tuned H against the exhaustive grid — for two very different
+"systems" (MPI-like and pySpark-like).
+
+  PYTHONPATH=src python examples/tune_h.py
+"""
+import functools
+
+from repro.core import CoCoAConfig, CoCoATrainer, PROFILES
+from repro.core.tradeoff import autotune_H
+from repro.data import make_glm_data
+
+A, b, _ = make_glm_data(m=256, n=768, density=0.2, seed=4)
+EPS = 1e-3
+
+
+@functools.lru_cache(maxsize=64)
+def rounds_to_eps(H: int):
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=H, seed=0), A, b)
+    return tr.run(800, record_every=1, target_eps=EPS).rounds_to(EPS)
+
+
+def round_time_model(profile, H):
+    t_solver = 4e-4 * H          # measured-linear solver cost model
+    return profile.round_time(t_solver, t_ref_s=4e-4 * 96)
+
+
+for name in ("E_mpi", "D_pyspark_c"):
+    p = PROFILES[name]
+    h_star = autotune_H(rounds_to_eps,
+                        functools.partial(round_time_model, p), 4, 4096)
+    grid = [8, 32, 96, 384, 1536, 4096]
+    costs = {H: (rounds_to_eps(H) or 10**9) * round_time_model(p, H)
+             for H in grid}
+    h_grid = min(costs, key=costs.get)
+    cost_star = (rounds_to_eps(h_star) or 10**9) * round_time_model(p, h_star)
+    print(f"{name:14s} autotuned H = {h_star:5d} "
+          f"(cost {cost_star:7.2f}s) vs grid best H = {h_grid:5d} "
+          f"(cost {costs[h_grid]:7.2f}s)")
+    assert cost_star <= 2.0 * costs[h_grid]
+print("autotuner tracks the per-system optimum — 'algorithms that adapt "
+      "their parameters to system conditions' (paper §6)")

@@ -1,0 +1,65 @@
+"""Flat-file checkpointing: pytree <-> .npz (+ structure manifest).
+
+Arrays are keyed by their pytree path; bf16 (unsupported by numpy) is
+stored as uint16 bit patterns with a dtype tag. Works for params,
+optimizer state, and data-pipeline state alike. Atomic via tmp+rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    flat, _ = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype == jnp.bfloat16:
+            dtypes[k] = "bfloat16"
+            a = a.view(np.uint16)
+        else:
+            dtypes[k] = str(a.dtype)
+        arrays[k] = a
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, **arrays)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"dtypes": dtypes, "step": step}, f)
+
+
+def restore_checkpoint(path: str, like_tree):
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        a = data[key]
+        if meta["dtypes"][key] == "bfloat16":
+            a = a.view(np.uint16).astype(np.uint16)
+            arr = jnp.asarray(a).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(a)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), \
+        meta.get("step")

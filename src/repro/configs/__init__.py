@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, MLAConfig, EncDecConfig, ShapeConfig,
+    SHAPES, input_specs, padded_vocab,
+)
+from repro.configs.registry import ARCHS, get_config, list_archs  # noqa: F401

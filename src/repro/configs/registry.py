@@ -1,0 +1,31 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3",
+    "chatglm3-6b": "repro.configs.chatglm3",
+    "nemotron-4-15b": "repro.configs.nemotron4",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma",
+    "tinyllama-1.1b": "repro.configs.tinyllama",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "mamba2-2.7b": "repro.configs.mamba2",
+    "command-r-35b": "repro.configs.command_r",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

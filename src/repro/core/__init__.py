@@ -1,0 +1,6 @@
+"""The paper's contribution: CoCoA-style communication-efficient distributed
+GLM training, framework-overhead modelling, and the communication/computation
+trade-off machinery (the H knob)."""
+from repro.core.glm import GLMProblem, primal_objective, ridge_exact, suboptimality  # noqa: F401
+from repro.core.cocoa import CoCoAConfig, CoCoATrainer  # noqa: F401
+from repro.core.overheads import OverheadProfile, PROFILES  # noqa: F401

@@ -1,0 +1,87 @@
+"""Generalized linear model objectives for the paper's workload.
+
+The paper trains elastic-net-regularized least squares (ridge for eta=1):
+
+    P(alpha) = 1/2 ||A alpha - b||^2
+               + lam * ( eta/2 ||alpha||^2 + (1-eta) ||alpha||_1 )
+
+with the data matrix ``A`` partitioned **column-wise** across workers
+(each worker owns a block of features / coordinates of alpha).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GLMProblem:
+    """An elastic-net regression problem instance."""
+    lam: float = 1.0         # regularization strength
+    eta: float = 1.0         # 1.0 => pure ridge; 0.0 => pure lasso
+
+    def regularizer(self, alpha: jax.Array) -> jax.Array:
+        l2 = 0.5 * self.eta * jnp.sum(alpha * alpha)
+        l1 = (1.0 - self.eta) * jnp.sum(jnp.abs(alpha))
+        return self.lam * (l2 + l1)
+
+    def loss(self, residual: jax.Array) -> jax.Array:
+        """f(v) = 1/2 ||v - b||^2 expressed on the residual w = v - b."""
+        return 0.5 * jnp.sum(residual * residual)
+
+
+def primal_objective(problem: GLMProblem, A: jax.Array, b: jax.Array,
+                     alpha: jax.Array) -> jax.Array:
+    r = A @ alpha - b
+    return problem.loss(r) + problem.regularizer(alpha)
+
+
+def primal_from_state(problem: GLMProblem, w: jax.Array,
+                      reg_sum: jax.Array) -> jax.Array:
+    """Objective from the shared residual ``w = A alpha - b`` plus the
+    (possibly psum'd) regularizer value — what the master can evaluate
+    without ever gathering alpha (the persistent-local-memory scheme)."""
+    return problem.loss(w) + reg_sum
+
+
+def ridge_exact(A: np.ndarray, b: np.ndarray, lam: float) -> np.ndarray:
+    """Closed-form ridge solution (eta=1):  (A^T A + lam I)^-1 A^T b."""
+    n = A.shape[1]
+    return np.linalg.solve(A.T @ A + lam * np.eye(n), A.T @ b)
+
+
+def optimal_objective(problem: GLMProblem, A: np.ndarray, b: np.ndarray,
+                      n_iters: int = 200_000) -> float:
+    """High-precision P* — closed form for ridge, else proximal gradient."""
+    if problem.eta == 1.0:
+        alpha = ridge_exact(A, b, problem.lam)
+        return float(primal_objective(problem, jnp.asarray(A), jnp.asarray(b),
+                                      jnp.asarray(alpha)))
+    # FISTA for the elastic-net case.
+    A_j, b_j = jnp.asarray(A), jnp.asarray(b)
+    L = float(np.linalg.norm(A, 2) ** 2 + problem.lam * problem.eta)
+    thresh = problem.lam * (1.0 - problem.eta) / L
+
+    @jax.jit
+    def step(carry, _):
+        alpha, y, t = carry
+        grad = A_j.T @ (A_j @ y - b_j) + problem.lam * problem.eta * y
+        z = y - grad / L
+        alpha_new = jnp.sign(z) * jnp.maximum(jnp.abs(z) - thresh, 0.0)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_new = alpha_new + (t - 1.0) / t_new * (alpha_new - alpha)
+        return (alpha_new, y_new, t_new), ()
+
+    n = A.shape[1]
+    init = (jnp.zeros(n), jnp.zeros(n), jnp.asarray(1.0))
+    (alpha, _, _), _ = jax.lax.scan(step, init, None, length=min(n_iters, 20000))
+    return float(primal_objective(problem, A_j, b_j, alpha))
+
+
+def suboptimality(p_now: float, p_star: float, p_zero: float) -> float:
+    """Normalized suboptimality in [0, 1]:  (P - P*) / (P(0) - P*)."""
+    denom = max(p_zero - p_star, 1e-30)
+    return max(p_now - p_star, 0.0) / denom

@@ -1,0 +1,85 @@
+"""Framework-overhead model — the paper's central measurement, §5.2/Fig 3.
+
+The paper isolates ``T_overhead = T_tot - T_worker - T_master`` by running
+byte-identical native (C++) local solvers under Spark/Scala, pySpark and
+MPI. We reproduce the *methodology* on one host: the local-solver compute
+time is **measured live** (our Pallas/ref solver plays the role of the
+C++ module), and each implementation (A)-(E) contributes
+
+  t_round(H) = compute_mult * t_solver(H)  +  overhead_units * T_ref
+
+where ``T_ref`` is the measured solver time at the calibration point
+H = n_local (the setting of Fig 3), and the dimensionless constants are
+calibrated to the paper's stated ratios:
+
+  * C++ offload speeds up the Scala solver ~10x and the Python solver
+    >100x (Fig 3 discussion)                 -> compute_mult 10 / 150.
+  * pySpark overheads are 15x Spark/Scala's  -> C = 15 * A.
+  * flat-format Scala reduces overhead 3x    -> B = A / 3.
+  * persistent-local-memory + meta-RDD cut overheads 3x (Scala) and
+    10x (Python)                             -> B* = B/3, D* = D/10.
+  * MPI overhead is ~3% of total time        -> E ~= 0.03 units.
+  * Python-C API adds slight overhead on top of pySpark -> D = C + 1.
+
+With T_worker(C++) := 1 unit (~= 30s/100 rounds in Fig 3), the paper's
+bars give A ~= 2.0 units of overhead and C ~= 30 units.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class OverheadProfile:
+    name: str
+    description: str
+    compute_mult: float       # local-solver slowdown vs native/C++ module
+    overhead_units: float     # per-round framework overhead, units of T_ref
+    persistent_alpha: bool    # may keep alpha_[k] resident across rounds?
+
+    def round_time(self, t_solver_s: float, t_ref_s: float,
+                   t_master_s: float = 0.0) -> float:
+        return (self.compute_mult * t_solver_s
+                + self.overhead_units * t_ref_s + t_master_s)
+
+    def compute_fraction(self, t_solver_s: float, t_ref_s: float) -> float:
+        c = self.compute_mult * t_solver_s
+        return c / max(c + self.overhead_units * t_ref_s, 1e-30)
+
+
+PROFILES: dict[str, OverheadProfile] = {
+    "A_spark": OverheadProfile(
+        "A_spark", "Spark/Scala reference (Breeze local solver)",
+        compute_mult=10.0, overhead_units=2.0, persistent_alpha=False),
+    "B_spark_c": OverheadProfile(
+        "B_spark_c", "Spark/Scala + JNI C++ solver, flat RDD format",
+        compute_mult=1.05, overhead_units=2.0 / 3.0, persistent_alpha=False),
+    "C_pyspark": OverheadProfile(
+        "C_pyspark", "pySpark reference (NumPy local solver)",
+        compute_mult=150.0, overhead_units=30.0, persistent_alpha=False),
+    "D_pyspark_c": OverheadProfile(
+        "D_pyspark_c", "pySpark + Python-C API C++ solver",
+        compute_mult=1.0, overhead_units=31.0, persistent_alpha=False),
+    "B_spark_opt": OverheadProfile(
+        "B_spark_opt", "(B)* persistent local memory + meta-RDD (Scala)",
+        compute_mult=1.05, overhead_units=2.0 / 9.0, persistent_alpha=True),
+    "D_pyspark_opt": OverheadProfile(
+        "D_pyspark_opt", "(D)* persistent local memory + meta-RDD (Python)",
+        compute_mult=1.0, overhead_units=3.1, persistent_alpha=True),
+    "E_mpi": OverheadProfile(
+        "E_mpi", "MPI/C++ reference",
+        compute_mult=1.0, overhead_units=0.031, persistent_alpha=True),
+}
+
+
+def communicated_bytes_per_round(m: int, n: int, K: int,
+                                 persistent_alpha: bool,
+                                 itemsize: int = 8) -> int:
+    """Bytes through the master per round (paper Fig 1 + §5.3).
+
+    Always: K workers send the m-vector Delta v up, receive v back.
+    Non-persistent schemes additionally ship the full alpha up and down.
+    """
+    v_traffic = 2 * K * m * itemsize
+    a_traffic = 0 if persistent_alpha else 2 * n * itemsize
+    return v_traffic + a_traffic

@@ -1,0 +1,121 @@
+"""The communication-computation trade-off machinery (paper §5.5, Figs 6-7).
+
+``H`` — local SCD steps per round — is *the* tuning knob: more local work
+per round means fewer (expensive) communication rounds but diminishing
+convergence benefit per round. The optimum depends on the framework's
+per-round overhead, which is why the paper finds optimal H differing by
+>25x between implementations of the same algorithm on the same hardware.
+
+This module provides the sweep + autotuner used by the benchmarks and by
+``optim/local_updates.py``'s roofline-driven variant for transformer
+training.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cocoa import CoCoAConfig, CoCoATrainer
+from repro.core.overheads import OverheadProfile
+
+
+@dataclass
+class HSweepPoint:
+    H: int
+    rounds_to_eps: int | None
+    t_solver_s: float          # measured local-solver wall time per round
+
+
+@dataclass
+class HSweep:
+    eps: float
+    n_local: int
+    t_ref_s: float = float("nan")  # measured t_solver at H = n_local
+    points: list = field(default_factory=list)
+
+
+def measure_solver_time(trainer: CoCoATrainer, H: int, reps: int = 3) -> float:
+    """Wall time of one (jitted) local-solver round at the given H —
+    plays the role of the paper's measured T_worker per round."""
+    cfg = CoCoAConfig(**{**trainer.cfg.__dict__, "H": H})
+    t = CoCoATrainer(cfg, trainer.A_np, trainer.b_np)
+    alpha, w = t.init_state()
+    import jax
+    key = jax.random.key(0)
+    out = t._round_fn(alpha, w, key)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = t._round_fn(alpha, w, key)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep_H(A, b, base_cfg: CoCoAConfig, H_grid, eps: float = 1e-3,
+            max_rounds: int = 2000, measure: bool = True) -> HSweep:
+    n_local = int(np.ceil(A.shape[1] / base_cfg.K))
+    sweep = HSweep(eps=eps, n_local=n_local)
+    for H in H_grid:
+        cfg = CoCoAConfig(**{**base_cfg.__dict__, "H": int(H)})
+        trainer = CoCoATrainer(cfg, A, b)
+        hist = trainer.run(max_rounds, record_every=1, target_eps=eps)
+        t_s = measure_solver_time(trainer, int(H)) if measure else float("nan")
+        sweep.points.append(HSweepPoint(int(H), hist.rounds_to(eps), t_s))
+    if measure:
+        sweep.t_ref_s = measure_solver_time(
+            CoCoATrainer(base_cfg, A, b), n_local)
+    return sweep
+
+
+def time_to_eps(profile: OverheadProfile, point: HSweepPoint,
+                t_ref_s: float) -> float:
+    if point.rounds_to_eps is None:
+        return float("inf")
+    return point.rounds_to_eps * profile.round_time(point.t_solver_s, t_ref_s)
+
+
+def optimal_H(profile: OverheadProfile, sweep: HSweep) -> tuple[int, float]:
+    """(H*, time-to-eps at H*) for one framework profile."""
+    best = (None, float("inf"))
+    for p in sweep.points:
+        t = time_to_eps(profile, p, sweep.t_ref_s)
+        if t < best[1]:
+            best = (p.H, t)
+    return best
+
+
+def compute_fraction_at(profile: OverheadProfile, sweep: HSweep, H: int) -> float:
+    for p in sweep.points:
+        if p.H == H:
+            return profile.compute_fraction(p.t_solver_s, sweep.t_ref_s)
+    raise KeyError(H)
+
+
+def autotune_H(rounds_to_eps_fn, round_time_fn, lo: int, hi: int,
+               tol: int = 1) -> int:
+    """Golden-section search over integer H minimizing
+    rounds_to_eps(H) * round_time(H). Both callables may be models or
+    live measurements; used by the beyond-paper auto-adaptive variant."""
+    phi = (np.sqrt(5) - 1) / 2
+
+    def cost(H):
+        r = rounds_to_eps_fn(int(H))
+        return float("inf") if r is None else r * round_time_fn(int(H))
+
+    a, b = float(lo), float(hi)
+    c, d = b - phi * (b - a), a + phi * (b - a)
+    fc, fd = cost(c), cost(d)
+    while b - a > tol:
+        if fc <= fd:
+            b, d, fd = d, c, fc
+            c = b - phi * (b - a)
+            fc = cost(c)
+        else:
+            a, c, fc = c, d, fd
+            d = a + phi * (b - a)
+            fd = cost(d)
+    return int(round((a + b) / 2))

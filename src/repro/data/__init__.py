@@ -1,0 +1,1 @@
+from repro.data.synthetic import make_glm_data  # noqa: F401

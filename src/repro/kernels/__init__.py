@@ -1,0 +1,5 @@
+# The paper's compute hot-spot is the local SCD solver, which it
+# offloads to optimized native (C++) modules — here that role is played
+# by a Pallas TPU kernel (scd.py) with a pure-jnp oracle (ref.py).
+from repro.kernels.ops import scd_steps_kernel  # noqa: F401
+from repro.kernels.ref import scd_steps_ref  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the Pallas SCD kernel.
+
+The contract is identical to ``repro.core.solvers.scd_steps`` (which is
+the algorithmic source of truth); re-exported here so kernel tests and
+benchmarks depend only on ``repro.kernels``.
+"""
+from repro.core.solvers import scd_steps as scd_steps_ref  # noqa: F401
+from repro.core.solvers import soft_threshold  # noqa: F401

@@ -1,0 +1,276 @@
+"""Shared builders for dry-run / roofline: abstract params, shardings,
+and lowered step functions for every (arch x shape x mesh) combination.
+
+No jax device state is touched at import time; callers (dryrun.py,
+roofline.py) set XLA_FLAGS before importing anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+import contextlib
+
+from repro.configs import ModelConfig, ShapeConfig, SHAPES, get_config, input_specs
+from repro.configs.base import padded_vocab
+from repro.launch import sharding as sh
+from repro.models.layers import set_partitioning
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.serve import make_serve_step
+from repro.train import make_train_step
+
+# archs where a 500k-token full-attention decode is impossible and a
+# sliding window is substituted (cfg.long_context == "swa")
+LONG_WINDOW = 8192
+
+
+@contextlib.contextmanager
+def partitioning(mesh):
+    """Bind the models' logical activation axes to this mesh + enter the
+    mesh context so with_sharding_constraint resolves axis names."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    set_partitioning(dp=dp, tp="model", mesh=mesh)
+    try:
+        with mesh:
+            yield
+    finally:
+        set_partitioning(None, None)
+
+
+@dataclass
+class Built:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    lowered: Any
+    kind: str
+    notes: dict
+
+
+def shape_variant(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Adjust the arch config for a given input shape (SWA for 500k)."""
+    if shape.name == "long_500k" and cfg.long_context == "swa":
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k" and cfg.long_context == "skip":
+        return False
+    return True
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    """bf16 optimizer state for the >100B configs (memory notes in
+    EXPERIMENTS.md); f32 elsewhere."""
+    big = cfg.moe is not None or cfg.d_model >= 8192
+    return AdamWConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def abstract_train_args(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        *, fsdp: bool):
+    model = build_model(cfg)
+    opt_cfg = opt_config_for(cfg)
+    params_s = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    opt_s = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_s)
+    batch_s = dict(input_specs(cfg, shape))
+    p_specs = sh.param_specs(params_s, mesh, fsdp=fsdp)
+    o_specs = {
+        "mu": sh.param_specs(opt_s["mu"], mesh, fsdp=fsdp),
+        "nu": sh.param_specs(opt_s["nu"], mesh, fsdp=fsdp),
+        "count": P(),
+    }
+    b_specs = sh.batch_specs(batch_s, mesh)
+    return model, opt_cfg, (params_s, opt_s, batch_s), (p_specs, o_specs, b_specs)
+
+
+def lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                fsdp: bool | None = None, remat: bool = True,
+                unroll: bool = False, donate: bool = True,
+                microbatch: int | None = None):
+    cfg = shape_variant(cfg, shape)
+    if fsdp is None:
+        fsdp = cfg.moe is not None or cfg.d_model >= 6144
+    if microbatch is None:
+        # gradient accumulation for the activation-heavy giants
+        microbatch = 4 if (cfg.moe is not None or cfg.d_model >= 7168) else 1
+    model, opt_cfg, (params_s, opt_s, batch_s), (p_sp, o_sp, b_sp) = \
+        abstract_train_args(cfg, shape, mesh, fsdp=fsdp)
+    step = make_train_step(model, opt_cfg, remat=remat, unroll=unroll,
+                           microbatch=microbatch)
+    jit_kw = dict(
+        in_shardings=(sh.shardings_of(p_sp, mesh),
+                      sh.shardings_of(o_sp, mesh),
+                      sh.shardings_of(b_sp, mesh)),
+        out_shardings=(sh.shardings_of(p_sp, mesh),
+                       sh.shardings_of(o_sp, mesh), None),
+    )
+    if donate:
+        jit_kw["donate_argnums"] = (0, 1)
+    with partitioning(mesh):
+        lowered = jax.jit(step, **jit_kw).lower(params_s, opt_s, batch_s)
+    return Built(cfg, shape, mesh, lowered, "train",
+                 {"fsdp": fsdp, "remat": remat, "microbatch": microbatch,
+                  "opt_dtype": opt_cfg.state_dtype})
+
+
+def lower_train_local_updates(cfg: ModelConfig, shape: ShapeConfig,
+                              mesh: Mesh, *, H: int, remat: bool = True):
+    """The paper's technique at transformer scale: H local optimizer
+    steps per parameter synchronization (local-SGD-style), expressed as
+    a partial-manual shard_map over the data axes ("model" stays a GSPMD
+    auto axis). Collective traffic for parameter sync drops ~1/H.
+    """
+    from repro.optim.local_updates import LocalUpdatesConfig, local_updates_round
+
+    cfg = shape_variant(cfg, shape)
+    model, opt_cfg, (params_s, opt_s, batch_s), (p_sp, o_sp, b_sp) = \
+        abstract_train_args(cfg, shape, mesh, fsdp=False)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    # H stacked microbatches; each data shard consumes its slice of each
+    batch_H = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((H, *s.shape), s.dtype), batch_s)
+    step = make_train_step(model, opt_cfg, remat=remat, grad_sync_axis=None)
+    lu_cfg = LocalUpdatesConfig(H=H)
+
+    def shard_fn(params, opt_state, batches):
+        params, opt_state, metrics = local_updates_round(
+            step, params, opt_state, batches, lu_cfg, dp)
+        return params, opt_state, jax.tree.map(lambda m: m[-1], metrics)
+
+    # manual over the data axes only; "model" remains auto/GSPMD
+    import jax as _jax
+    p_manual = _jax.tree.map(lambda s: P(), params_s,
+                             is_leaf=lambda x: hasattr(x, "shape"))
+    o_manual = _jax.tree.map(lambda s: P(), opt_s,
+                             is_leaf=lambda x: hasattr(x, "shape"))
+    b_manual = _jax.tree.map(
+        lambda s: P(None, dp, *([None] * (len(s.shape) - 2))), batch_H,
+        is_leaf=lambda x: hasattr(x, "shape"))
+    fn = jax.shard_map(shard_fn, mesh=mesh, axis_names=set(dp),
+                       in_specs=(p_manual, o_manual, b_manual),
+                       out_specs=(p_manual, o_manual, P()),
+                       check_vma=False)
+
+    jit_kw = dict(
+        in_shardings=(sh.shardings_of(p_sp, mesh),
+                      sh.shardings_of(o_sp, mesh), None),
+        out_shardings=(sh.shardings_of(p_sp, mesh),
+                       sh.shardings_of(o_sp, mesh), None),
+        donate_argnums=(0, 1),
+    )
+    with partitioning(mesh):
+        lowered = jax.jit(fn, **jit_kw).lower(params_s, opt_s, batch_H)
+    return Built(cfg, shape, mesh, lowered, "train_localH",
+                 {"H": H, "remat": remat})
+
+
+def abstract_decode_args(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    model = build_model(cfg)
+    params_s = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    B, S = shape.global_batch, shape.seq_len
+    max_len = S if cfg.sliding_window is None else min(S, cfg.sliding_window)
+    specs = input_specs(cfg, shape)
+    if cfg.family == "audio":
+        enc_batch = {"frame_embeds": jax.ShapeDtypeStruct(
+            (B, cfg.encdec.source_len, cfg.d_model), jnp.bfloat16)}
+        states_s = jax.eval_shape(
+            lambda p, b: model.init_states(p, B, max_len, batch=b),
+            params_s, enc_batch)
+    else:
+        states_s = jax.eval_shape(
+            lambda: model.init_states(None, B, max_len))
+    tokens_s = specs["tokens"]
+    pos_s = specs["positions"]
+    return model, params_s, states_s, tokens_s, pos_s
+
+
+def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                 unroll: bool = False, donate: bool = True,
+                 fsdp: bool | None = None):
+    cfg = shape_variant(cfg, shape)
+    model, params_s, states_s, tokens_s, pos_s = \
+        abstract_decode_args(cfg, shape, mesh)
+    if fsdp is None:
+        # >100B params don't fit 16-way model sharding at 2 bytes/param;
+        # shard weights over the data axes too (weight-gathered serving).
+        fsdp = cfg.moe is not None
+    p_sp = sh.param_specs(params_s, mesh, fsdp=fsdp)
+    s_sp = sh.state_specs(states_s, mesh)
+    t_sp = sh.batch_specs({"t": tokens_s, "p": pos_s}, mesh)
+
+    if unroll:
+        def serve_step(params, states, tokens, positions):
+            from repro.models import transformer as T
+            logits, states, _ = T.forward(
+                params, cfg, {"tokens": tokens, "positions": positions},
+                mode="step", states=states, unroll=True)
+            return logits, states
+    else:
+        serve_step = make_serve_step(model)
+    jit_kw = dict(
+        in_shardings=(sh.shardings_of(p_sp, mesh),
+                      sh.shardings_of(s_sp, mesh),
+                      sh.shardings_of(t_sp["t"], mesh),
+                      sh.shardings_of(t_sp["p"], mesh)),
+        out_shardings=(None, sh.shardings_of(s_sp, mesh)),
+    )
+    if donate:
+        jit_kw["donate_argnums"] = (1,)
+    with partitioning(mesh):
+        lowered = jax.jit(serve_step, **jit_kw).lower(
+            params_s, states_s, tokens_s, pos_s)
+    return Built(cfg, shape, mesh, lowered, "decode", {})
+
+
+def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                  donate: bool = True, unroll: bool = False,
+                  fsdp: bool | None = None):
+    cfg = shape_variant(cfg, shape)
+    model = build_model(cfg)
+    params_s = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    batch_s = dict(input_specs(cfg, shape))
+    if fsdp is None:
+        fsdp = cfg.moe is not None  # weight-gathered serving for >100B
+    p_sp = sh.param_specs(params_s, mesh, fsdp=fsdp)
+    b_sp = sh.batch_specs(batch_s, mesh)
+
+    def prefill(params, batch):
+        B = batch["tokens"].shape[0]
+        S = batch["tokens"].shape[1]
+        states = model.init_states(params, B, S, batch=batch
+                                   if cfg.family == "audio" else None)
+        # serving needs only the last-position logits; skipping the full
+        # (B,S,V) unembed saves tens of GB at 32k prefill
+        return model.prefill(params, batch, states, last_logits_only=True,
+                             unroll=unroll)
+
+    out_s = jax.eval_shape(prefill, params_s, batch_s)
+    s_sp = sh.state_specs(out_s[1], mesh)
+    with partitioning(mesh):
+        lowered = jax.jit(
+            prefill,
+            in_shardings=(sh.shardings_of(p_sp, mesh),
+                          sh.shardings_of(b_sp, mesh)),
+            out_shardings=(None, sh.shardings_of(s_sp, mesh)),
+        ).lower(params_s, batch_s)
+    return Built(cfg, shape, mesh, lowered, "prefill", {})
+
+
+def lower_pair(arch: str, shape_name: str, mesh: Mesh, **kw) -> Built | None:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supported(cfg, shape):
+        return None
+    if shape.kind == "train":
+        return lower_train(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, shape, mesh)
+    return lower_decode(cfg, shape, mesh)

@@ -1,0 +1,33 @@
+"""Production meshes for the TPU v5e target.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — jax locks the device count on first use, and
+only the dry-run is allowed to fake 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_worker_mesh(K: int):
+    """1-D mesh for the CoCoA shard_map driver."""
+    return jax.make_mesh((K,), ("workers",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+# Hardware constants (TPU v5e), used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

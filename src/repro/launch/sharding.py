@@ -1,0 +1,158 @@
+"""Sharding rules: param/state/batch PartitionSpecs per architecture.
+
+Tensor parallelism runs over the 16-way ``model`` axis on *feature*
+dimensions (they divide 16 for every assigned arch; head counts often
+don't — kv=1..8, q=40/6 — so head-dim sharding would force GSPMD padding
+everywhere). MoE experts shard on ``model`` (expert parallelism). Batch
+shards on (``pod``, ``data``). ``fsdp=True`` additionally shards the
+remaining large dim of every >=2-D param over ``data`` (ZeRO-3-style via
+GSPMD, used by the >100B configs).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parent-module name -> role of its "w"
+_COL = {"wq", "wk", "wv", "w_up", "w_gate", "w_uq", "w_dkv", "w_kr",
+        "w_x", "w_gate_branch", "w_rec_gate", "w_in_gate", "w_in", "proj"}
+_ROW = {"wo", "w_down", "w_out"}
+_REPL = {"router"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def _base_spec(names: list[str], ndim: int, dp: tuple,
+               tied_embed: bool = False) -> P:
+    """Spec ignoring any stacked leading layer dim (ndim = effective)."""
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    grandp = names[-3] if len(names) >= 3 else ""
+    if name == "embed":
+        # untied: shard the feature dim — the token gather then needs NO
+        # collective (vocab-sharded lookup all-reduces a (B,S,d) mask-sum
+        # every step). Tied embeddings keep vocab sharding so the
+        # unembed matmul stays column-parallel.
+        return P("model", None) if tied_embed else P(None, "model")
+    if name == "unembed":
+        return P(None, "model")
+    if name == "dec_pos":
+        return P(None, None)
+    # MoE expert tensors: (E, d_in, d_out) under channel/
+    if name in ("w_up", "w_gate", "w_down") and ndim == 3:
+        return P("model", None, None)
+    if ndim <= 1:
+        return P(*([None] * ndim))
+    if parent in _REPL or name in _REPL:
+        return P(*([None] * ndim))
+    if parent in _COL or (name == "w" and grandp in _COL) or name in _COL:
+        return P(*([None] * (ndim - 1)), "model")
+    if parent in _ROW or (name == "w" and grandp in _ROW) or name in _ROW:
+        return P(*([None] * (ndim - 2)), "model", None)
+    if parent == "conv" or name == "conv":
+        return P(*([None] * (ndim - 1)), "model")
+    return P(*([None] * ndim))
+
+
+def _apply_fsdp(spec: P, shape, dp_axis: str, data_size: int) -> P:
+    """Put the data axis on the first unsharded dim that divides."""
+    parts = list(spec)
+    for i, (s, dim) in enumerate(zip(parts, shape)):
+        if s is None and dim % data_size == 0 and dim >= 1024:
+            parts[i] = dp_axis
+            break
+    return P(*parts)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = False):
+    """PartitionSpec tree mirroring ``params``."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tied_embed = isinstance(params, dict) and "unembed" not in params \
+        and "embed" in params
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        ndim = leaf.ndim
+        stacked = "stack" in names
+        eff = ndim - 1 if stacked else ndim
+        base = _base_spec(names, eff, dp, tied_embed)
+        parts = ((None,) + tuple(base)) if stacked else tuple(base)
+        spec = P(*parts)
+        if fsdp and leaf.ndim >= 2:
+            spec = _apply_fsdp(spec, leaf.shape, "data", mesh.shape["data"])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def batch_specs(batch, mesh: Mesh, *, shard_batch: bool = True):
+    """Inputs: batch dim over (pod, data) when it divides; else replicated."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def spec_of(path, leaf):
+        if not shard_batch or leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % data_size == 0:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, batch)
+
+
+def state_specs(states, mesh: Mesh):
+    """Decode-state sharding (mirrors models.layers.constrain_cache):
+    KV/latent caches shard batch over (pod,data) and cache-sequence over
+    "model" (context parallelism); the B=1 long-context decode shards
+    the sequence over ALL axes. Recurrent states (h/conv) shard their
+    feature dims over "model"."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tp_size = int(mesh.shape["model"])
+
+    CACHE = ("k", "v", "c", "kr", "pos_abs", "cross_k", "cross_v")
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        if leaf.ndim == 0:
+            return P()
+        shape = leaf.shape
+        parts = [None] * leaf.ndim
+        name = names[-1] if names else ""
+        if name in CACHE:
+            if shape[0] == 1 and leaf.ndim >= 2 \
+                    and shape[1] % (data_size * tp_size) == 0:
+                parts[1] = dp + ("model",)          # B=1: seq over all
+            else:
+                if shape[0] % data_size == 0 and shape[0] > 1:
+                    parts[0] = dp
+                if leaf.ndim >= 2 and shape[1] % tp_size == 0:
+                    parts[1] = "model"              # cache seq over model
+            return P(*parts)
+        # recurrent states
+        if shape[0] % data_size == 0 and shape[0] > 1:
+            parts[0] = dp
+        if name == "conv" and leaf.ndim == 3 and shape[2] % tp_size == 0:
+            parts[2] = "model"
+        if name == "h" and leaf.ndim == 4 and shape[1] % tp_size == 0:
+            parts[1] = "model"   # SSD heads
+        if name == "h" and leaf.ndim == 2 and shape[1] % tp_size == 0:
+            parts[1] = "model"   # RG-LRU width
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_of, states)
+
+
+def shardings_of(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

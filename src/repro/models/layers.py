@@ -1,0 +1,1109 @@
+"""Functional model primitives (no framework deps beyond jax).
+
+Every module is a pair ``init_*(key, ...) -> params-dict`` and an apply
+function. Blocks share the interface::
+
+    block_apply(params, cfg, kind, x, positions, mode, state)
+        -> (y, new_state)
+
+where ``mode`` is "full" (train / prefill over a whole sequence) or
+"step" (single-token decode against persistent state), and ``state`` is
+the block's decode state (KV cache / ring buffer / SSM state / LRU
+state). ``positions`` is (B, S) int32 absolute positions — or
+(B, S, 3) for M-RoPE.
+
+Attention over long sequences uses a blockwise (flash-style) streaming
+softmax implemented with lax.scan so that no (S, S) score matrix is ever
+materialized. NOTE (roofline): the blockwise form computes the full
+q-chunk x kv-chunk rectangle and masks, so causal prefill does ~2x the
+useful attention FLOPs; benchmarks correct for this analytically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+# ----------------------------------------------------------------------
+# logical partitioning (activation sharding constraints)
+# ----------------------------------------------------------------------
+# Model code is mesh-agnostic; the launcher binds logical axes ("dp" for
+# batch, "tp" for tensor/feature/expert parallel) to mesh axis names
+# before lowering. Unbound (CPU tests) -> constraints are no-ops.
+
+_AXES: dict = {"dp": None, "tp": None, "mesh": None}
+
+
+def set_partitioning(dp=None, tp=None, mesh=None):
+    """Bind logical axes to mesh axis names (tuple allowed for dp).
+    ``mesh`` enables the shard_map expert-parallel MoE path."""
+    _AXES["dp"], _AXES["tp"], _AXES["mesh"] = dp, tp, mesh
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical dims ('dp'|'tp'|None)."""
+    if _AXES["dp"] is None and _AXES["tp"] is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    parts = []
+    for i, l in enumerate(logical):
+        if l == "dpt":  # combined data+model axes (context parallelism)
+            dp = _AXES.get("dp") or ()
+            dp = dp if isinstance(dp, tuple) else (dp,)
+            tp = _AXES.get("tp")
+            ax = tuple(a for a in (*dp, tp) if a) or None
+        else:
+            ax = _AXES.get(l) if isinstance(l, str) else None
+        # skip axes that would shard a trivial/ill-fitting dim (e.g. the
+        # B=1 long-context decode batch, or 6-head whisper attention)
+        if ax is not None and (x.shape[i] == 1
+                               or (x.shape[i] < 16 and x.shape[i] % 8 != 0)):
+            ax = None
+        parts.append(ax)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (e.g. stray CPU call) -> no-op
+
+
+# ----------------------------------------------------------------------
+# basics
+# ----------------------------------------------------------------------
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, d_in, d_out, *, bias=False, dtype=jnp.bfloat16, scale=None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d, kind="rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y + p.get("bias", 0.0)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+# ----------------------------------------------------------------------
+# RoPE (full / partial / 2d / M-RoPE)
+# ----------------------------------------------------------------------
+
+def _rope_angles(positions, rot_dim, theta):
+    """positions (..., S) -> cos/sin of shape (..., S, rot_dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """x (..., rot_dim) with cos/sin (..., rot_dim/2): pairwise rotation."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x (B,S,H,D); positions (B,S) or (B,S,3) for mrope."""
+    D = x.shape[-1]
+    if cfg.rope_style == "none":
+        return x
+    rot = int(D * (0.5 if cfg.rope_style == "2d" else cfg.rope_frac))
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    xf = xr.astype(jnp.float32)
+    if cfg.rope_style == "mrope":
+        # 3 position components (t, h, w) rotate disjoint sections.
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[..., None],
+                                         (*positions.shape, 3))
+        nsec = 3
+        half = rot // 2
+        sec = [half - 2 * (half // nsec), half // nsec, half // nsec]
+        cs, ss = [], []
+        for i in range(nsec):
+            c, s = _rope_angles(positions[..., i], rot, cfg.rope_theta)
+            cs.append(c)
+            ss.append(s)
+        # section i of the rotary pairs uses position component i
+        bounds = [0, sec[0], sec[0] + sec[1], half]
+        cos = jnp.concatenate(
+            [cs[i][..., bounds[i]:bounds[i + 1]] for i in range(nsec)], -1)
+        sin = jnp.concatenate(
+            [ss[i][..., bounds[i]:bounds[i + 1]] for i in range(nsec)], -1)
+        out = _rotate(xf, cos[:, :, None, :], sin[:, :, None, :])
+    else:
+        cos, sin = _rope_angles(positions, rot, cfg.rope_theta)  # (B,S,rot/2)
+        out = _rotate(xf, cos[:, :, None, :], sin[:, :, None, :])
+    return jnp.concatenate([out.astype(x.dtype), xp], -1)
+
+# ----------------------------------------------------------------------
+# blockwise (flash-style) attention — no (S,S) materialization
+# ----------------------------------------------------------------------
+
+def _attend_dense(q, k, v, mask, scale, softcap=None):
+    """Reference dense attention for short S / decode. q (B,Sq,H,D),
+    k/v (B,Skv,KV,D); mask broadcastable to (B,H,Sq,Skv) or None."""
+    B, Sq, H, D = q.shape
+    KV, Dv = k.shape[2], v.shape[-1]
+    g = H // KV
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, KV, g, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if mask is not None:
+        # mask (B,1,1,Skv) or (B,1,Sq,Skv) -> broadcast over (B,KV,g,Sq,Skv)
+        m = mask[:, :, None, :, :]
+        logits = jnp.where(m, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+_FORCE_DENSE_ATTN = False
+
+
+def set_force_dense_attention(v: bool) -> None:
+    """Roofline-only switch: the flash scans are cost-counted once by
+    XLA's cost analysis, so the roofline lowering uses dense attention
+    (identical FLOPs/bytes semantics, fully counted). Never used for
+    real execution paths."""
+    global _FORCE_DENSE_ATTN
+    _FORCE_DENSE_ATTN = v
+
+
+def flash_attention(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+                    scale, q_chunk=512, kv_chunk=1024, softcap=None):
+    """Memory-efficient attention: O(S) residuals in both directions.
+
+    Forward streams kv chunks with an online softmax; backward (custom
+    VJP) RECOMPUTES the score chunks instead of saving them — without
+    this, reverse-mode AD of the scan stores every (q_chunk x kv_chunk)
+    probability block, i.e. the full S^2 score matrix.
+    softcap is only supported on the non-differentiable path (decode)."""
+    if _FORCE_DENSE_ATTN:
+        m = jnp.ones((q.shape[0], 1, q.shape[1], k.shape[1]), bool)
+        if causal:
+            m &= (q_pos[:, :, None] >= kv_pos[:, None, :])[:, None]
+        if window is not None:
+            m &= (q_pos[:, :, None] - window < kv_pos[:, None, :])[:, None]
+        return _attend_dense(q, k, v, m, scale, softcap)
+    return _flash_vjp(q, k, v, q_pos, kv_pos, causal, window, float(scale),
+                      int(q_chunk), int(kv_chunk),
+                      None if softcap is None else float(softcap))
+
+
+def _flash_fwd_only(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+                    scale, q_chunk=512, kv_chunk=1024, softcap=None):
+    """Streaming-softmax attention via scan over kv chunks nested in a
+    scan over q chunks. q (B,Sq,H,D); k/v (B,Skv,KV,D) with GQA.
+    q_pos (B,Sq), kv_pos (B,Skv) absolute positions for masking."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_kv)),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    nq, nkv = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+    qs = (q * scale).astype(jnp.float32).reshape(B, nq, q_chunk, KV, g, D)
+    qs = jnp.moveaxis(qs, 1, 0)                      # (nq,B,qc,KV,g,D)
+    qp = jnp.moveaxis(q_pos.reshape(B, nq, q_chunk), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nkv, kv_chunk, KV, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nkv, kv_chunk, KV, Dv), 1, 0)
+    kp = jnp.moveaxis(kv_pos.reshape(B, nkv, kv_chunk), 1, 0)
+
+    def q_body(_, q_blk):
+        qi, qpi = q_blk
+
+        def kv_body(carry, kv_blk):
+            m_prev, l_prev, acc = carry
+            kj, vj, kpj = kv_blk
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qi,
+                                kj.astype(jnp.float32))
+            if softcap:
+                logits = jnp.tanh(logits / softcap) * softcap
+            mask = jnp.ones((B, 1, 1, q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= (kpj[:, None, None, None, :] <=
+                         qpi[:, None, None, :, None])
+            if window is not None:
+                mask &= (kpj[:, None, None, None, :] >
+                         qpi[:, None, None, :, None] - window)
+            mask &= (kpj < jnp.iinfo(jnp.int32).max)[:, None, None, None, :]
+            logits = jnp.where(mask, logits, -1e30)
+            m_new = jnp.maximum(m_prev, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc), ()
+
+        init = (jnp.full((B, KV, g, q_chunk), -jnp.inf),
+                jnp.zeros((B, KV, g, q_chunk)),
+                jnp.zeros((B, KV, g, q_chunk, Dv)))
+        (m, l, acc), _ = lax.scan(kv_body, init, (ks, vs, kp))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, jnp.moveaxis(out, 3, 1)          # (B,qc,KV,g,D)
+
+    _, outs = lax.scan(q_body, None, (qs, qp))        # (nq,B,qc,KV,g,Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Sq].astype(q.dtype) if pad_q else out.astype(q.dtype)
+
+
+# --- flash attention with recomputing (flash) backward ----------------
+
+def _flash_chunks(q, k, v, q_pos, kv_pos, q_chunk, kv_chunk):
+    """Pad to chunk multiples and reorder into per-chunk stacks."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_kv)),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    nq, nkv = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+    f32 = jnp.float32
+    return {
+        "qs": jnp.moveaxis(q.astype(f32).reshape(B, nq, q_chunk, KV, g, D),
+                           1, 0),
+        "qp": jnp.moveaxis(q_pos.reshape(B, nq, q_chunk), 1, 0),
+        "ks": jnp.moveaxis(k.astype(f32).reshape(B, nkv, kv_chunk, KV, D),
+                           1, 0),
+        "vs": jnp.moveaxis(v.astype(f32).reshape(B, nkv, kv_chunk, KV, Dv),
+                           1, 0),
+        "kp": jnp.moveaxis(kv_pos.reshape(B, nkv, kv_chunk), 1, 0),
+        "dims": (B, Sq, Skv, H, KV, g, D, Dv, nq, nkv, q_chunk, kv_chunk,
+                 pad_q, pad_kv),
+    }
+
+
+def _chunk_mask(qpi, kpj, causal, window):
+    """(B,1,1,qc,kvc) validity mask from absolute positions."""
+    m = (kpj < jnp.iinfo(jnp.int32).max)[:, None, None, None, :]
+    m = m & jnp.ones_like(qpi, bool)[:, None, None, :, None]
+    if causal:
+        m &= (kpj[:, None, None, None, :] <= qpi[:, None, None, :, None])
+    if window is not None:
+        m &= (kpj[:, None, None, None, :] >
+              qpi[:, None, None, :, None] - window)
+    return m
+
+
+def _flash_fwd_core(c, causal, window, scale, softcap):
+    """Returns outs (nq,B,KV,g,qc,Dv) f32 and lses (nq,B,KV,g,qc) f32."""
+    B, Sq, Skv, H, KV, g, D, Dv, nq, nkv, qc, kvc, _, _ = c["dims"]
+
+    def q_body(_, blk):
+        qi, qpi = blk
+
+        def kv_body(carry, kvb):
+            m_prev, l_prev, acc = carry
+            kj, vj, kpj = kvb
+            z = scale * jnp.einsum("bqkgd,bskd->bkgqs", qi, kj)
+            if softcap:
+                z = jnp.tanh(z / softcap) * softcap
+            z = jnp.where(_chunk_mask(qpi, kpj, causal, window), z, -1e30)
+            m_new = jnp.maximum(m_prev, z.max(-1))
+            p = jnp.exp(z - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd",
+                                                     p, vj)
+            return (m_new, l_new, acc), ()
+
+        init = (jnp.full((B, KV, g, qc), -jnp.inf),
+                jnp.zeros((B, KV, g, qc)),
+                jnp.zeros((B, KV, g, qc, Dv)))
+        (m, l, acc), _ = lax.scan(kv_body, init, (c["ks"], c["vs"], c["kp"]))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 1e30)
+        return None, (out, lse)
+
+    _, (outs, lses) = lax.scan(q_body, None, (c["qs"], c["qp"]))
+    return outs, lses
+
+
+def _flash_call(q, k, v, q_pos, kv_pos, causal, window, scale, q_chunk,
+                kv_chunk, softcap):
+    c = _flash_chunks(q, k, v, q_pos, kv_pos, q_chunk, kv_chunk)
+    B, Sq, Skv, H, KV, g, D, Dv, nq, nkv, qc, kvc, pad_q, _ = c["dims"]
+    outs, lses = _flash_fwd_core(c, causal, window, scale, softcap)
+    out = jnp.moveaxis(outs, 4, 2)                    # (nq,B,qc,KV,g,Dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * qc, H, Dv)
+    out = out[:, :Sq] if pad_q else out
+    return out.astype(q.dtype), (outs, lses)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _flash_vjp(q, k, v, q_pos, kv_pos, causal, window, scale, q_chunk,
+               kv_chunk, softcap):
+    return _flash_call(q, k, v, q_pos, kv_pos, causal, window, scale,
+                       q_chunk, kv_chunk, softcap)[0]
+
+
+def _flash_vjp_fwd(q, k, v, q_pos, kv_pos, causal, window, scale, q_chunk,
+                   kv_chunk, softcap):
+    out, (outs, lses) = _flash_call(q, k, v, q_pos, kv_pos, causal, window,
+                                    scale, q_chunk, kv_chunk, softcap)
+    return out, (q, k, v, q_pos, kv_pos, outs, lses)
+
+
+def _flash_vjp_bwd(causal, window, scale, q_chunk, kv_chunk, softcap,
+                   res, dout):
+    import numpy as onp
+    q, k, v, q_pos, kv_pos, outs, lses = res
+    c = _flash_chunks(q, k, v, q_pos, kv_pos, q_chunk, kv_chunk)
+    B, Sq, Skv, H, KV, g, D, Dv, nq, nkv, qc, kvc, pad_q, pad_kv = c["dims"]
+    if pad_q:
+        dout = jnp.pad(dout, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    douts = jnp.moveaxis(
+        dout.astype(jnp.float32).reshape(B, nq, qc, KV, g, Dv), 1, 0)
+    douts = jnp.moveaxis(douts, 2, 4)                 # (nq,B,KV,g,qc,Dv)
+    Dres = jnp.sum(douts * outs, -1)                  # (nq,B,KV,g,qc)
+
+    def q_body(carry, blk):
+        dk_all, dv_all = carry
+        qi, qpi, lse_i, dout_i, D_i = blk
+
+        def kv_body(inner, kvb):
+            dq_i, dk_all, dv_all = inner
+            kj, vj, kpj, j = kvb
+            z = scale * jnp.einsum("bqkgd,bskd->bkgqs", qi, kj)
+            if softcap:
+                t = jnp.tanh(z / softcap)
+                zc = jnp.where(_chunk_mask(qpi, kpj, causal, window),
+                               t * softcap, -1e30)
+            else:
+                zc = jnp.where(_chunk_mask(qpi, kpj, causal, window),
+                               z, -1e30)
+            p = jnp.exp(zc - lse_i[..., None])        # (B,KV,g,qc,kvc)
+            dv_j = jnp.einsum("bkgqs,bkgqd->bskd", p, dout_i)
+            dp = jnp.einsum("bkgqd,bskd->bkgqs", dout_i, vj)
+            ds = p * (dp - D_i[..., None])
+            if softcap:
+                ds = ds * (1.0 - t * t)
+            dq_i = dq_i + scale * jnp.einsum("bkgqs,bskd->bqkgd", ds, kj)
+            dk_j = scale * jnp.einsum("bkgqs,bqkgd->bskd", ds, qi)
+            return (dq_i, dk_all.at[j].add(dk_j),
+                    dv_all.at[j].add(dv_j)), ()
+
+        init_dq = jnp.zeros((B, qc, KV, g, D))
+        (dq_i, dk_all, dv_all), _ = lax.scan(
+            kv_body, (init_dq, dk_all, dv_all),
+            (c["ks"], c["vs"], c["kp"], jnp.arange(nkv)))
+        return (dk_all, dv_all), dq_i
+
+    (dk_all, dv_all), dqs = lax.scan(
+        q_body,
+        (jnp.zeros((nkv, B, kvc, KV, D)), jnp.zeros((nkv, B, kvc, KV, Dv))),
+        (c["qs"], c["qp"], lses, douts, Dres))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, nq * qc, H, D)[:, :Sq]
+    dk = jnp.moveaxis(dk_all, 0, 1).reshape(B, nkv * kvc, KV, D)[:, :Skv]
+    dv = jnp.moveaxis(dv_all, 0, 1).reshape(B, nkv * kvc, KV, Dv)[:, :Skv]
+    zq = onp.zeros(q_pos.shape, dtype=jax.dtypes.float0)
+    zk = onp.zeros(kv_pos.shape, dtype=jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            zq, zk)
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+# ----------------------------------------------------------------------
+# GQA attention block (full & SWA), with decode caches
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = _split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, H * Dh, bias=cfg.attn_bias, dtype=dtype),
+        "wk": dense_init(ks[1], d, KV * Dh, bias=cfg.attn_bias, dtype=dtype),
+        "wv": dense_init(ks[2], d, KV * Dh, bias=cfg.attn_bias, dtype=dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype=dtype),
+    }
+
+
+def attention_apply(p, cfg: ModelConfig, x, positions, *, mode, state,
+                    local: bool = False, cross_kv=None):
+    """GQA attention. local=True uses cfg.rglru.local_window (hybrid) or
+    cfg.sliding_window. cross_kv: (k, v, kv_pos) for cross-attention
+    (whisper decoder) — no cache mutation, no rope on kv."""
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window = None
+    if local:
+        window = (cfg.rglru.local_window if cfg.rglru else cfg.sliding_window)
+    scale = Dh ** -0.5
+    q = constrain(dense(p["wq"], x).reshape(B, S, H, Dh),
+                  "dp", None, "tp", None)
+    if cross_kv is None:
+        # GQA with few kv heads: kv is replicated over tp (Megatron GQA)
+        k = constrain(dense(p["wk"], x).reshape(B, S, KV, Dh),
+                      "dp", None, None, None)
+        v = constrain(dense(p["wv"], x).reshape(B, S, KV, Dh),
+                      "dp", None, None, None)
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+    else:
+        k, v, kv_pos = cross_kv
+
+    pos1d = positions[..., 0] if positions.ndim == 3 else positions
+    if mode == "full":
+        if cross_kv is not None:
+            out = _attend_dense(q, k, v, None, scale, cfg.logit_softcap)
+        else:
+            out = flash_attention(q, k, v, q_pos=pos1d, kv_pos=pos1d,
+                                  causal=True, window=window, scale=scale,
+                                  softcap=cfg.logit_softcap)
+        new_state = state
+        if state is not None and cross_kv is None:   # prefill fills cache
+            new_state = _cache_fill(state, k, v, pos1d, window)
+    else:  # step: S == 1
+        if cross_kv is not None:
+            mask = None
+            out = _attend_dense(q, k, v, mask, scale, cfg.logit_softcap)
+            new_state = state
+        else:
+            state = _cache_append(state, k, v, pos1d, window)
+            ck, cv, cpos = state["k"], state["v"], state["pos_abs"]
+            mask = ((cpos <= pos1d) & (cpos >= 0))
+            if window is not None:
+                mask &= cpos > pos1d - window
+            mask = mask[:, None, None, :]            # (B,1,1,T)
+            out = _attend_dense(q, ck, cv, mask, scale, cfg.logit_softcap)
+            new_state = state
+    y = dense(p["wo"], constrain(out.reshape(B, S, H * Dh),
+                                 "dp", None, "tp"))
+    return y, new_state
+
+
+def constrain_cache(state: dict) -> dict:
+    """Shard decode caches: batch over dp and cache-sequence over tp
+    (context parallelism); for B=1 long-context decode the sequence dim
+    takes both axes."""
+    out = {}
+    for name, c in state.items():
+        if c.ndim >= 2 and c.shape[0] == 1:
+            out[name] = constrain(c, None, "dpt", *([None] * (c.ndim - 2)))
+        elif c.ndim >= 2:
+            out[name] = constrain(c, "dp", "tp", *([None] * (c.ndim - 2)))
+        else:
+            out[name] = constrain(c, "dp")
+    return out
+
+
+def init_attn_cache(cfg: ModelConfig, B, max_len, *, window=None,
+                    dtype=jnp.bfloat16):
+    T = min(window, max_len) if window else max_len
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((B, T, KV, Dh), dtype),
+        "v": jnp.zeros((B, T, KV, Dh), dtype),
+        "pos_abs": jnp.full((B, T), -1, jnp.int32),  # -1 = empty slot
+    }
+
+
+def _cache_append(state, k, v, pos, window):
+    """Write one token (S==1) at pos (B,1). Ring buffer when windowed."""
+    T = state["k"].shape[1]
+    slot = (pos[:, 0] % T).astype(jnp.int32)         # (B,)
+    bidx = jnp.arange(k.shape[0])
+    return constrain_cache({
+        "k": state["k"].at[bidx, slot].set(k[:, 0]),
+        "v": state["v"].at[bidx, slot].set(v[:, 0]),
+        "pos_abs": state["pos_abs"].at[bidx, slot].set(pos[:, 0]),
+    })
+
+
+def _cache_fill(state, k, v, pos, window):
+    """Bulk prefill: write the last T positions into the cache."""
+    T = state["k"].shape[1]
+    S = k.shape[1]
+    if S >= T:
+        ks, vs, ps = k[:, -T:], v[:, -T:], pos[:, -T:]
+        slot = ps % T
+        bidx = jnp.arange(k.shape[0])[:, None]
+        return constrain_cache({
+            "k": state["k"].at[bidx, slot].set(ks),
+            "v": state["v"].at[bidx, slot].set(vs),
+            "pos_abs": state["pos_abs"].at[bidx, slot].set(ps),
+        })
+    slot = pos % T
+    bidx = jnp.arange(k.shape[0])[:, None]
+    return constrain_cache({
+        "k": state["k"].at[bidx, slot].set(k),
+        "v": state["v"].at[bidx, slot].set(v),
+        "pos_abs": state["pos_abs"].at[bidx, slot].set(pos),
+    })
+
+# ----------------------------------------------------------------------
+# MLA (deepseek-v3) — latent-compressed KV
+# ----------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = _split(key, 7)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype=dtype),
+        "q_norm": norm_init(m.q_lora_rank),
+        "w_uq": dense_init(ks[1], m.q_lora_rank, H * qk_dim, dtype=dtype),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank, dtype=dtype),
+        "kv_norm": norm_init(m.kv_lora_rank),
+        "w_kr": dense_init(ks[3], d, m.qk_rope_dim, dtype=dtype),
+        "w_uk": dense_init(ks[4], m.kv_lora_rank, H * m.qk_nope_dim, dtype=dtype),
+        "w_uv": dense_init(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype=dtype),
+        "wo": dense_init(ks[6], H * m.v_head_dim, d, dtype=dtype),
+    }
+
+
+def _mla_rope(x, positions, cfg):
+    sub = dataclasses.replace(cfg, rope_style="full", rope_frac=1.0)
+    return apply_rope(x, positions, sub)
+
+
+def mla_apply(p, cfg: ModelConfig, x, positions, *, mode, state):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    pos1d = positions[..., 0] if positions.ndim == 3 else positions
+    q = dense(p["w_uq"], apply_norm(p["q_norm"], dense(p["w_dq"], x)))
+    q = q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = _mla_rope(q_rope, pos1d, cfg)
+    c = apply_norm(p["kv_norm"], dense(p["w_dkv"], x))        # (B,S,r)
+    k_rope = _mla_rope(dense(p["w_kr"], x)[:, :, None, :], pos1d, cfg)
+
+    if mode == "step" and state is not None:
+        T = state["c"].shape[1]
+        slot = pos1d[:, 0] % T
+        bidx = jnp.arange(B)
+        state = constrain_cache({
+            "c": state["c"].at[bidx, slot].set(c[:, 0]),
+            "kr": state["kr"].at[bidx, slot].set(k_rope[:, 0, 0]),
+            "pos_abs": state["pos_abs"].at[bidx, slot].set(pos1d[:, 0]),
+        })
+        c_all, kr_all, kv_pos = state["c"], state["kr"], state["pos_abs"]
+    else:
+        c_all, kr_all, kv_pos = c, k_rope[:, :, 0, :], pos1d
+        if state is not None:   # prefill fills latent cache
+            T = state["c"].shape[1]
+            slot = pos1d % T
+            bidx = jnp.arange(B)[:, None]
+            state = constrain_cache({
+                "c": state["c"].at[bidx, slot].set(c),
+                "kr": state["kr"].at[bidx, slot].set(k_rope[:, :, 0, :]),
+                "pos_abs": state["pos_abs"].at[bidx, slot].set(pos1d),
+            })
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    if mode == "full":
+        # Prefill/train: reconstruct per-head k/v once for the whole
+        # sequence (standard MLA prefill).
+        T = c_all.shape[1]
+        k_nope = dense(p["w_uk"], c_all).reshape(B, T, H, m.qk_nope_dim)
+        val = dense(p["w_uv"], c_all).reshape(B, T, H, m.v_head_dim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      (B, T, H, m.qk_rope_dim))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = flash_attention(q_full, k, val, q_pos=pos1d, kv_pos=kv_pos,
+                              causal=True, window=None, scale=scale)
+    else:
+        # Decode: ABSORBED form — attention runs in the latent space, so
+        # per-token cost is O(T*r), never materializing per-head k/v.
+        r = m.kv_lora_rank
+        w_uk = p["w_uk"]["w"].reshape(r, H, m.qk_nope_dim)
+        w_uv = p["w_uv"]["w"].reshape(r, H, m.v_head_dim)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))          # (B,1,H,r)
+        cf = c_all.astype(jnp.float32)
+        logits = (jnp.einsum("bshr,btr->bhst", q_lat, cf)
+                  + jnp.einsum("bshe,bte->bhst",
+                               q_rope.astype(jnp.float32),
+                               kr_all.astype(jnp.float32))) * scale
+        mask = ((kv_pos <= pos1d) & (kv_pos >= 0))[:, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        attn = jax.nn.softmax(logits, axis=-1)                # (B,H,1,T)
+        out_lat = jnp.einsum("bhst,btr->bshr", attn, cf)      # (B,1,H,r)
+        out = jnp.einsum("bshr,rhv->bshv", out_lat,
+                         w_uv.astype(jnp.float32)).astype(x.dtype)
+    y = dense(p["wo"], out.reshape(B, S, H * m.v_head_dim))
+    return y, state
+
+
+def init_mla_cache(cfg: ModelConfig, B, max_len, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c": jnp.zeros((B, max_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((B, max_len, m.qk_rope_dim), dtype),
+        "pos_abs": jnp.full((B, max_len), -1, jnp.int32),
+    }
+
+# ----------------------------------------------------------------------
+# MLP + MoE
+# ----------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None, dtype=jnp.bfloat16):
+    d_ff = d_ff or cfg.d_ff
+    ks = _split(key, 3)
+    p = {"w_up": dense_init(ks[0], cfg.d_model, d_ff, bias=cfg.mlp_bias,
+                            dtype=dtype),
+         "w_down": dense_init(ks[1], d_ff, cfg.d_model, bias=cfg.mlp_bias,
+                              dtype=dtype)}
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, d_ff, bias=cfg.mlp_bias,
+                                 dtype=dtype)
+    return p
+
+
+def mlp_apply(p, cfg: ModelConfig, x):
+    act = _ACTS[cfg.mlp_act]
+    h = act(dense(p["w_up"], x)) if "w_gate" not in p else (
+        act(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+    if h.ndim == 3:
+        h = constrain(h, "dp", None, "tp")
+    return dense(p["w_down"], h)
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    mo = cfg.moe
+    d, dff = cfg.d_model, mo.d_expert
+    ks = _split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, mo.num_experts, dtype=jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (mo.num_experts, d, dff),
+                                   jnp.float32) * scale).astype(dtype),
+        "w_gate": (jax.random.normal(ks[2], (mo.num_experts, d, dff),
+                                     jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (mo.num_experts, dff, d),
+                                     jnp.float32) / math.sqrt(dff)).astype(dtype),
+    }
+    if mo.num_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=mo.num_shared * dff,
+                               dtype=dtype)
+    return p
+
+
+def _route(router_p, mo, xt):
+    """Router: (gates, experts, aux_loss) for tokens xt (T, d)."""
+    logits = dense(router_p, xt.astype(jnp.float32))          # (T,E)
+    probs = jax.nn.softmax(logits, -1)
+    gates, experts = lax.top_k(probs, mo.top_k)               # (T,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style, over all top-k assignments)
+    density = jnp.mean(
+        jnp.sum(jax.nn.one_hot(experts, mo.num_experts), axis=1), 0) / mo.top_k
+    mean_prob = jnp.mean(probs, 0)
+    aux = mo.num_experts * jnp.sum(density * mean_prob) * mo.router_aux_coef
+    return gates, experts, aux
+
+
+def _dispatch_tables(experts, gates, T, mo, C):
+    """Sort-based capacity dispatch tables: tok_idx (E,C), gate_val (E,C)."""
+    flat_e = experts.reshape(-1)                              # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), mo.top_k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    seg_counts = jnp.bincount(se, length=mo.num_experts)
+    seg_start = jnp.cumsum(seg_counts) - seg_counts
+    pos_in_seg = jnp.arange(T * mo.top_k) - seg_start[se]
+    keep = pos_in_seg < C
+    slot_e = jnp.where(keep, se, mo.num_experts)              # overflow bin
+    slot_c = jnp.where(keep, pos_in_seg, 0)
+    tok_idx = jnp.zeros((mo.num_experts + 1, C), jnp.int32).at[
+        slot_e, slot_c].set(st.astype(jnp.int32))[: mo.num_experts]
+    gate_val = jnp.zeros((mo.num_experts + 1, C), flat_g.dtype).at[
+        slot_e, slot_c].set(jnp.where(keep, sg, 0.0))[: mo.num_experts]
+    return tok_idx, gate_val
+
+
+def _expert_ffn(cfg, xe, wg, wu, wd):
+    """Batched expert matmuls. xe (E, C, d) with E local/sharded."""
+    act = _ACTS[cfg.mlp_act]
+    h = act(jnp.einsum("ecd,edf->ecf", xe, wg)) \
+        * jnp.einsum("ecd,edf->ecf", xe, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)                  # (E,C,d)
+
+
+def _capacity(mo, T, no_drop):
+    if no_drop:
+        return T * mo.top_k
+    return max(1, int(mo.capacity_factor * mo.top_k * T / mo.num_experts))
+
+
+def moe_apply(p, cfg: ModelConfig, x, *, no_drop: bool = False):
+    """Mixture-of-experts channel block. Returns (y, aux_loss).
+
+    Two execution paths:
+      * distributed (launcher bound a mesh): shard_map expert parallelism
+        — tokens stay on their data shard, routing is local, and expert
+        slabs move via all-to-all over the model axis (the canonical EP
+        communication pattern). Tokens over local capacity are dropped.
+      * single-host / CPU tests: global sort-based capacity dispatch.
+    ``no_drop=True`` (decode, tiny T) sizes capacity so routing is exact.
+    """
+    mesh = _AXES.get("mesh")
+    if mesh is not None and _AXES["dp"] is not None:
+        B = x.shape[0]
+        import numpy as _np
+        dp = _AXES["dp"] if isinstance(_AXES["dp"], tuple) else (_AXES["dp"],)
+        dp_size = int(_np.prod([mesh.shape[a] for a in dp]))
+        if B % dp_size == 0 and cfg.moe.num_experts % mesh.shape[_AXES["tp"]] == 0:
+            return _moe_sharded(p, cfg, x, no_drop=no_drop)
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    gates, experts, aux = _route(p["router"], mo, xt)
+    C = _capacity(mo, T, no_drop)
+    tok_idx, gate_val = _dispatch_tables(experts, gates, T, mo, C)
+    xe = constrain(xt[tok_idx], "tp", None, None)             # (E,C,d)
+    ye = _expert_ffn(cfg, xe, p["w_gate"], p["w_up"], p["w_down"])
+    ye = ye * gate_val[..., None].astype(ye.dtype)
+    y = jnp.zeros((T, d), ye.dtype).at[tok_idx.reshape(-1)].add(
+        ye.reshape(-1, d))
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], cfg, xt)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_sharded(p, cfg: ModelConfig, x, *, no_drop: bool):
+    """shard_map expert parallelism: local routing per data shard, expert
+    slabs exchanged via all-to-all over the model (expert) axis."""
+    from jax.sharding import PartitionSpec as P
+
+    mo = cfg.moe
+    mesh = _AXES["mesh"]
+    tp = _AXES["tp"]
+    dp = _AXES["dp"] if isinstance(_AXES["dp"], tuple) else (_AXES["dp"],)
+    B, S, d = x.shape
+    import numpy as _np
+    dp_size = int(_np.prod([mesh.shape[a] for a in dp]))
+    tp_size = int(mesh.shape[tp])
+    E = mo.num_experts
+    assert E % tp_size == 0, (E, tp_size)
+    T_loc = (B // dp_size) * S
+    C_loc = _capacity(mo, T_loc, no_drop)
+
+    def local_fn(xb, router_w, wg, wu, wd, shared):
+        Bl, Sl, _ = xb.shape
+        xt = xb.reshape(Bl * Sl, d)
+        gates, experts, aux = _route({"w": router_w}, mo, xt)
+        tok_idx, gate_val = _dispatch_tables(experts, gates, Bl * Sl, mo,
+                                             C_loc)
+        xe = xt[tok_idx]                                      # (E, C_loc, d)
+        # expert slabs to their owners: (E, C, d) -> (E/tp, tp*C, d)
+        xe = lax.all_to_all(xe, tp, split_axis=0, concat_axis=1, tiled=True)
+        ye = _expert_ffn(cfg, xe, wg, wu, wd)
+        ye = lax.all_to_all(ye, tp, split_axis=1, concat_axis=0, tiled=True)
+        ye = ye * gate_val[..., None].astype(ye.dtype)
+        y = jnp.zeros((Bl * Sl, d), ye.dtype).at[
+            tok_idx.reshape(-1)].add(ye.reshape(-1, d))
+        if shared is not None:
+            # shared expert: Megatron col/row split over tp + psum
+            act = _ACTS[cfg.mlp_act]
+            h = act(xt @ shared["w_gate"]["w"]) * (xt @ shared["w_up"]["w"])
+            y = y + lax.psum(h @ shared["w_down"]["w"], tp)
+        aux = lax.pmean(aux, dp)
+        return y.reshape(Bl, Sl, d), aux[None]
+
+    shared_p = p.get("shared") or {}
+    shared_specs = {}
+    if shared_p:
+        shared_specs = {"w_gate": {"w": P(None, tp)},
+                        "w_up": {"w": P(None, tp)},
+                        "w_down": {"w": P(tp, None)}}
+    y, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None),
+                  P(tp, None, None), P(tp, None, None), P(tp, None, None),
+                  shared_specs),
+        out_specs=(P(dp, None, None), P(None)),
+        check_vma=False,
+    )(x, p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"], shared_p)
+    return y, aux[0]
+
+# ----------------------------------------------------------------------
+# causal depthwise conv1d (griffin / mamba2 frontends)
+# ----------------------------------------------------------------------
+
+def init_conv1d(key, width, d, dtype=jnp.bfloat16):
+    return {"w": (jax.random.normal(key, (width, d), jnp.float32)
+                  / math.sqrt(width)).astype(dtype),
+            "b": jnp.zeros((d,), dtype)}
+
+
+def conv1d_apply(p, x, *, mode, state):
+    """x (B,S,d). state (B,width-1,d) holds the trailing context."""
+    width = p["w"].shape[0]
+    if mode == "full":
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+        y = sum(xp[:, i: i + x.shape[1]] * p["w"][i] for i in range(width))
+        new_state = None if state is None else xp[:, -(width - 1):]
+        return y + p["b"], new_state
+    # step: S == 1
+    ctx = jnp.concatenate([state, x], 1)                      # (B,width,d)
+    y = jnp.einsum("bwd,wd->bd", ctx, p["w"])[:, None] + p["b"]
+    return y, ctx[:, 1:]
+
+# ----------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma / griffin)
+# ----------------------------------------------------------------------
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    width = cfg.rglru.lru_width or cfg.d_model
+    d = cfg.d_model
+    ks = _split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, width, dtype=dtype),
+        "w_gate_branch": dense_init(ks[1], d, width, dtype=dtype),
+        "conv": init_conv1d(ks[2], cfg.rglru.d_conv, width, dtype=dtype),
+        "w_rec_gate": dense_init(ks[3], width, width, dtype=dtype),
+        "w_in_gate": dense_init(ks[4], width, width, dtype=dtype),
+        # lam s.t. a = exp(-c*softplus(lam)) lands in ~(0.9, 0.999) at r=1
+        "lam": jnp.log(jnp.expm1(
+            jax.random.uniform(ks[5], (width,), jnp.float32,
+                               0.0001, 0.013))),
+        "w_out": dense_init(_split(ks[5], 2)[1], width, d, dtype=dtype),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_scan(x, r, i, lam):
+    """x,r,i (B,S,W) f32. Associative scan over time of
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t), a_t = a^(c r_t)."""
+    log_a = -_RGLRU_C * r * jax.nn.softplus(lam)              # log a_t
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * x)
+
+    def combine(c1, c2):
+        a1, h1 = c1
+        a2, h2 = c2
+        return a1 * a2, a2 * h1 + h2
+
+    a_s, h = lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def rglru_apply(p, cfg: ModelConfig, x, positions, *, mode, state):
+    """Griffin recurrent block: gate branch (gelu) * recurrent branch
+    (conv1d -> RG-LRU), then out-projection."""
+    gate = constrain(jax.nn.gelu(dense(p["w_gate_branch"], x)),
+                     "dp", None, "tp")
+    u = constrain(dense(p["w_x"], x), "dp", None, "tp")
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = conv1d_apply(p["conv"], u, mode=mode, state=conv_state)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["w_rec_gate"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_in_gate"], u).astype(jnp.float32))
+    lam = p["lam"]
+    if mode == "full":
+        h = _rglru_scan(uf, r, i, lam)
+        new_state = state
+        if state is not None:
+            new_state = {"h": h[:, -1].astype(jnp.float32), "conv": new_conv}
+    else:
+        log_a = -_RGLRU_C * r[:, 0] * jax.nn.softplus(lam)
+        a = jnp.exp(log_a)
+        h_prev = state["h"]
+        h1 = a * h_prev + jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-6)) \
+            * (i[:, 0] * uf[:, 0])
+        h = h1[:, None]
+        new_state = {"h": h1, "conv": new_conv}
+    y = dense(p["w_out"], (h.astype(x.dtype) * gate))
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, B, dtype=jnp.bfloat16):
+    width = cfg.rglru.lru_width or cfg.d_model
+    return {"h": jnp.zeros((B, width), jnp.float32),
+            "conv": jnp.zeros((B, cfg.rglru.d_conv - 1, width), dtype)}
+
+# ----------------------------------------------------------------------
+# Mamba-2 SSD block (state-space duality, chunked)
+# ----------------------------------------------------------------------
+
+def init_ssd(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.n_heads(d)
+    ks = _split(key, 4)
+    conv_dim = din + 2 * s.n_groups * s.d_state
+    return {
+        # in_proj -> [z (din), x (din), B (G*N), C (G*N), dt (nh)]
+        "w_in": dense_init(ks[0], d, 2 * din + 2 * s.n_groups * s.d_state + nh,
+                           dtype=dtype),
+        "conv": init_conv1d(ks[1], s.d_conv, conv_dim, dtype=dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (nh,), jnp.float32, 1., 16.)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jax.random.uniform(
+            ks[2], (nh,), jnp.float32, 1e-3, 1e-1))),
+        "out_norm": norm_init(din),
+        "w_out": dense_init(ks[3], din, d, dtype=dtype),
+    }
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk):
+    """Minimal SSD (mamba2 §6): x (B,S,H,P); dt (B,S,H); A (H,);
+    Bm/Cm (B,S,G,N). Returns y (B,S,H,P), final_state (B,H,P,N)."""
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0
+    nc = S // chunk
+    rep = H // G
+    x_ = x.reshape(b, nc, chunk, H, P)
+    dt_ = dt.reshape(b, nc, chunk, H)
+    B_ = jnp.repeat(Bm.reshape(b, nc, chunk, G, N), rep, axis=3)
+    C_ = jnp.repeat(Cm.reshape(b, nc, chunk, G, N), rep, axis=3)
+    dA = dt_ * (-jnp.exp(A))[None, None, None, :]             # (b,nc,c,H) <=0
+    dA_cum = jnp.cumsum(dA, axis=2)
+    # intra-chunk (quadratic within chunk). Mask BEFORE exp: the
+    # upper-triangle segments are positive and exp() of them overflows,
+    # which poisons gradients (inf * 0 = NaN in the backward pass).
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,nc,c,c,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    scores = jnp.einsum("bzchn,bzshn->bzcsh", C_, B_)          # (b,nc,c,c,H)
+    y_diag = jnp.einsum("bzcsh,bzcsh,bzsh,bzshp->bzchp",
+                        scores, L, dt_, x_)
+    # chunk end-states
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)      # (b,nc,c,H)
+    states = jnp.einsum("bzch,bzch,bzchn,bzchp->bzhpn",
+                        decay_to_end, dt_, B_, x_)             # per-chunk
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                 # (b,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((b, H, P, N), x.dtype)
+    hT, h_prev = lax.scan(scan_fn, h0,
+                          (jnp.moveaxis(states, 1, 0),
+                           jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                        # (b,nc,H,P,N)
+    decay_in = jnp.exp(dA_cum)                                 # (b,nc,c,H)
+    y_off = jnp.einsum("bzchn,bzhpn,bzch->bzchp", C_, h_prev, decay_in)
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, hT
+
+
+def ssd_apply(p, cfg: ModelConfig, x, positions, *, mode, state):
+    s = cfg.ssm
+    B, S, d = x.shape
+    din = s.d_inner(d)
+    nh = s.n_heads(d)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    zxbcdt = dense(p["w_in"], x)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = conv1d_apply(p["conv"], xbc, mode=mode, state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [din, din + G * N], axis=-1)
+    xs = constrain(xs.reshape(B, S, nh, P), "dp", None, "tp", None)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = p["A_log"]
+    if mode == "full":
+        pad = (-S) % s.chunk
+        if pad:
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            xs_p, dt_p, Bm_p, Cm_p = xs, dt, Bm, Cm
+        y, hT = _ssd_chunked(xs_p.astype(jnp.float32), dt_p,
+                             A, Bm_p.astype(jnp.float32),
+                             Cm_p.astype(jnp.float32), s.chunk)
+        y = y[:, :S]
+        new_state = state
+        if state is not None:
+            new_state = {"h": hT, "conv": new_conv}
+    else:
+        # recurrent step: h = exp(dt A) h + dt B x ; y = C h
+        dA = jnp.exp(dt[:, 0] * (-jnp.exp(A)))                 # (B,nh)
+        B_rep = jnp.repeat(Bm[:, 0], nh // G, axis=1)          # (B,nh,N)
+        C_rep = jnp.repeat(Cm[:, 0], nh // G, axis=1)
+        Bx = jnp.einsum("bhn,bhp,bh->bhpn", B_rep.astype(jnp.float32),
+                        xs[:, 0].astype(jnp.float32), dt[:, 0])
+        h = state["h"] * dA[..., None, None] + Bx
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_rep.astype(jnp.float32))
+        y = y[:, None]                                         # (B,1,nh,P)
+        new_state = {"h": h, "conv": new_conv}
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = apply_norm(p["out_norm"], y * jax.nn.silu(z))
+    return dense(p["w_out"], y), new_state
+
+
+def init_ssd_state(cfg: ModelConfig, B, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    nh = s.n_heads(d)
+    conv_dim = s.d_inner(d) + 2 * s.n_groups * s.d_state
+    return {"h": jnp.zeros((B, nh, s.head_dim, s.d_state), jnp.float32),
+            "conv": jnp.zeros((B, s.d_conv - 1, conv_dim), dtype)}

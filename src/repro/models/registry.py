@@ -1,0 +1,112 @@
+"""Uniform model interface over the decoder-LM and enc-dec families.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  init(key)                          -> params
+  forward_train(params, batch)       -> (logits, aux_loss)   [full seq]
+  prefill(params, batch, states)     -> (logits, states)
+  decode_step(params, batch, states) -> (logits, states)     [S == 1]
+  init_states(params, B, max_len[, batch]) -> per-layer decode state
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    def init(self, key, dtype=jnp.bfloat16):
+        if self.cfg.family == "audio":
+            return W.init_whisper(key, self.cfg, dtype)
+        return T.init_lm(key, self.cfg, dtype)
+
+    # ------------------------------------------------------------------
+    def forward_train(self, params, batch, *, unroll: bool = False,
+                      remat: bool = False):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc_out = W.encode(params, cfg, batch["frame_embeds"])
+            logits, _ = W.decode(params, cfg, batch["tokens"], enc_out)
+            return logits, jnp.zeros((), jnp.float32)
+        if cfg.mtp_depth > 0 and not unroll:
+            logits, hidden, aux = T.forward_hidden(params, cfg, batch,
+                                                   remat=remat)
+            # MTP logits are consumed by the loss; return both via aux dict
+            return logits, aux
+        logits, _, aux = T.forward(params, cfg, batch, mode="full",
+                                   states=None, unroll=unroll, remat=remat)
+        return logits, aux
+
+    def forward_train_mtp(self, params, batch, *, unroll: bool = False,
+                          remat: bool = False):
+        """Train forward returning MTP head logits too (deepseek-v3)."""
+        cfg = self.cfg
+        logits, hidden, aux = T.forward_hidden(params, cfg, batch,
+                                               remat=remat, unroll=unroll)
+        mtp = T.mtp_logits(params, cfg, hidden, batch)
+        return logits, mtp, aux
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, states, *, last_logits_only=False,
+                unroll=False):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc_out = W.encode(params, cfg, batch["frame_embeds"])
+            states = W.init_whisper_states(
+                params, cfg, batch["tokens"].shape[0],
+                states_max_len(states), enc_out)
+            logits, states = W.decode(params, cfg, batch["tokens"], enc_out,
+                                      mode="full", states=states)
+            if last_logits_only:
+                logits = logits[:, -1:]
+            return logits, states
+        logits, states, _ = T.forward(params, cfg, batch, mode="full",
+                                      states=states, unroll=unroll,
+                                      last_logits_only=last_logits_only)
+        return logits, states
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params, batch, states):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            logits, states = W.decode(params, cfg, batch["tokens"], None,
+                                      mode="step", states=states,
+                                      positions=batch["positions"])
+            return logits, states
+        logits, states, _ = T.forward(params, cfg, batch, mode="step",
+                                      states=states)
+        return logits, states
+
+    # ------------------------------------------------------------------
+    def init_states(self, params, B: int, max_len: int, batch=None,
+                    dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            assert batch is not None and "frame_embeds" in batch
+            enc_out = W.encode(params, cfg, batch["frame_embeds"])
+            return W.init_whisper_states(params, cfg, B, max_len, enc_out,
+                                         dtype)
+        return T.init_states(cfg, B, max_len, dtype)
+
+
+def states_max_len(states) -> int:
+    for st in states:
+        if isinstance(st, dict) and "self" in st:
+            return st["self"]["k"].shape[1]
+        if isinstance(st, dict) and "k" in st:
+            return st["k"].shape[1]
+    return 0
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

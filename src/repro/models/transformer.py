@@ -1,0 +1,393 @@
+"""Decoder-only LM assembling the block zoo into the assigned archs.
+
+A *layer* = (mixer, channel) pair with pre-norm residuals:
+  mixer   : attn | attn_local | mla | rglru | ssd
+  channel : mlp | moe | none
+
+``cfg.block_pattern`` lists the mixer kinds cycled over layers; the
+channel kind is derived per-arch (MoE archs route all-but-first_k_dense
+layers through MoE; mamba2 has no separate channel block).
+
+Layers are stored STACKED per pattern-slot so the forward pass can scan
+over layer periods (compile time independent of depth for the 48-80
+layer production configs). ``unroll=True`` switches to a python loop
+over static slices of the same stacked params — used by the roofline
+pass, where scan bodies would be cost-counted only once.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig, padded_vocab
+from repro.models import layers as L
+
+
+# ----------------------------------------------------------------------
+# layer templates
+# ----------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """[(mixer, channel)] for every layer."""
+    plan = []
+    pat = cfg.block_pattern
+    for i in range(cfg.num_layers):
+        mixer = pat[i % len(pat)]
+        if mixer == "ssd":
+            channel = "none"
+        elif cfg.moe is not None and i >= cfg.moe.first_k_dense:
+            channel = "moe"
+        else:
+            channel = "mlp"
+        if cfg.mla is not None and mixer == "attn":
+            mixer = "mla"
+        plan.append((mixer, channel))
+    return plan
+
+
+def _period(cfg: ModelConfig) -> int:
+    """Smallest cycle after which the (mixer, channel) plan repeats."""
+    plan = layer_plan(cfg)
+    base = len(cfg.block_pattern)
+    k = cfg.moe.first_k_dense if cfg.moe else 0
+    # prologue layers (first_k_dense) are kept out of the scanned stack
+    body = plan[k:]
+    p = base
+    while any(body[i] != body[i % p] for i in range(len(body))):
+        p += base
+    return p
+
+
+def _init_mixer(key, cfg, kind, dtype):
+    if kind in ("attn", "attn_local"):
+        return L.init_attention(key, cfg, dtype)
+    if kind == "mla":
+        return L.init_mla(key, cfg, dtype)
+    if kind == "rglru":
+        return L.init_rglru(key, cfg, dtype)
+    if kind == "ssd":
+        return L.init_ssd(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _apply_mixer(p, cfg, kind, x, positions, mode, state):
+    if kind == "attn":
+        return L.attention_apply(p, cfg, x, positions, mode=mode, state=state,
+                                 local=cfg.sliding_window is not None)
+    if kind == "attn_local":
+        return L.attention_apply(p, cfg, x, positions, mode=mode, state=state,
+                                 local=True)
+    if kind == "mla":
+        return L.mla_apply(p, cfg, x, positions, mode=mode, state=state)
+    if kind == "rglru":
+        return L.rglru_apply(p, cfg, x, positions, mode=mode, state=state)
+    if kind == "ssd":
+        return L.ssd_apply(p, cfg, x, positions, mode=mode, state=state)
+    raise ValueError(kind)
+
+
+def _init_layer(key, cfg, mixer, channel, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"mixer_norm": L.norm_init(cfg.d_model, cfg.norm),
+         "mixer": _init_mixer(k1, cfg, mixer, dtype)}
+    if channel == "mlp":
+        p["channel"] = L.init_mlp(k2, cfg, dtype=dtype)
+        p["channel_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    elif channel == "moe":
+        p["channel"] = L.init_moe(k2, cfg, dtype=dtype)
+        p["channel_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    return p
+
+
+def _apply_layer(p, cfg, mixer, channel, x, positions, mode, state):
+    """Returns (x, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    # Megatron-style sequence parallelism: the residual stream (and thus
+    # the remat-saved per-layer activation stack) is sharded over the
+    # model axis on the sequence dim; GSPMD turns the TP all-reduces
+    # into reduce-scatter + all-gather pairs around the matmuls.
+    x = L.constrain(x, "dp", "tp", None)
+    h_in = L.apply_norm(p["mixer_norm"], x, cfg.norm)
+    h, new_state = _apply_mixer(p["mixer"], cfg, mixer, h_in, positions,
+                                mode, state)
+    # block outputs are row-parallel partial sums; constraining them
+    # sequence-sharded turns the TP all-reduce into a reduce-scatter
+    # (half the bytes), the Megatron-SP schedule.
+    if mode == "full":
+        h = L.constrain(h, "dp", "tp", None)
+    if cfg.parallel_block and channel != "none":
+        # command-r style: attn and mlp read the same normed input
+        c = L.mlp_apply(p["channel"], cfg, h_in)
+        if mode == "full":
+            c = L.constrain(c, "dp", "tp", None)
+        x = x + h + c
+        return x, new_state, aux
+    x = x + h
+    if channel == "mlp":
+        y = L.mlp_apply(p["channel"],
+                        cfg, L.apply_norm(p["channel_norm"], x, cfg.norm))
+        x = x + (L.constrain(y, "dp", "tp", None) if mode == "full" else y)
+    elif channel == "moe":
+        y, aux = L.moe_apply(p["channel"], cfg,
+                             L.apply_norm(p["channel_norm"], x, cfg.norm),
+                             no_drop=(mode == "step"))
+        x = x + (L.constrain(y, "dp", "tp", None) if mode == "full" else y)
+    return x, new_state, aux
+
+
+# ----------------------------------------------------------------------
+# whole-model init
+# ----------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    v = padded_vocab(cfg)
+    plan = layer_plan(cfg)
+    k_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    period = _period(cfg)
+    body = plan[k_dense:]
+    assert len(body) % period == 0, (cfg.name, len(body), period)
+    n_cycles = len(body) // period
+
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[-1], (v, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dtype),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(
+            keys[-2], (cfg.d_model, v), jnp.float32)
+            / np.sqrt(cfg.d_model)).astype(dtype)
+    params["prologue"] = [
+        _init_layer(keys[i], cfg, *plan[i], dtype) for i in range(k_dense)]
+    stacks = []
+    for s in range(period):
+        per_cycle = [
+            _init_layer(keys[k_dense + c * period + s], cfg,
+                        *body[c * period + s], dtype)
+            for c in range(n_cycles)]
+        stacks.append(_stack(per_cycle))
+    params["stack"] = stacks
+    if cfg.mtp_depth > 0:
+        km = jax.random.split(keys[-3], 3)
+        params["mtp"] = {
+            "proj": L.dense_init(km[0], 2 * cfg.d_model, cfg.d_model,
+                                 dtype=dtype),
+            "norm": L.norm_init(cfg.d_model, cfg.norm),
+            "layer": _init_layer(km[1], cfg, plan[-1][0], "mlp", dtype),
+        }
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward passes
+# ----------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Token embedding + (VLM) patch-embedding early fusion.
+
+    Returns (x, positions) where positions is (B,S) or (B,S,3) (mrope).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.constrain(params["embed"][tokens], "dp", "tp", None)
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    if cfg.rope_style == "mrope":
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+        if "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(x.dtype)
+            P = pe.shape[1]
+            x = jnp.concatenate([pe, x[:, P:]], axis=1)
+            positions = jnp.concatenate(
+                [batch["patch_positions"],
+                 positions[:, P:]], axis=1)
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "full",
+            states: list | None = None, unroll: bool = False,
+            remat: bool = False, last_logits_only: bool = False):
+    """Full forward. Returns (logits, new_states, aux_loss).
+
+    states: per-layer decode states in plan order (prologue first), or
+    None for stateless train forward. remat=True checkpoints each layer
+    cycle (the scan body), the standard activation-memory policy.
+    """
+    plan = layer_plan(cfg)
+    k_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    period = _period(cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states: list = [None] * len(plan)
+
+    apply_layer = (jax.checkpoint(_apply_layer, static_argnums=(1, 2, 3, 6),
+                                  prevent_cse=False)
+                   if remat else _apply_layer)
+
+    for i, lp in enumerate(params["prologue"]):
+        st = None if states is None else states[i]
+        x, new_states[i], aux = apply_layer(lp, cfg, *plan[i], x, positions,
+                                            mode, st)
+        aux_total += aux
+
+    body = plan[k_dense:]
+    n_cycles = len(body) // period
+    if unroll or n_cycles == 1:
+        for c in range(n_cycles):
+            for s in range(period):
+                li = k_dense + c * period + s
+                lp = jax.tree.map(lambda a: a[c], params["stack"][s])
+                st = None if states is None else states[li]
+                x, new_states[li], aux = apply_layer(
+                    lp, cfg, *body[s], x, positions, mode, st)
+                aux_total += aux
+    else:
+        # scan over cycles; per-slot stacked params (and states) are xs
+        if states is None:
+            st_stacks = None
+        else:
+            st_stacks = [
+                _stack([states[k_dense + c * period + s]
+                        for c in range(n_cycles)]) for s in range(period)]
+
+        has_states = states is not None
+
+        def body_fn(carry, xs):
+            x, aux_c = carry
+            slot_params, slot_states = xs
+            outs = []
+            for s in range(period):
+                st = slot_states[s] if has_states else None
+                x, st_new, aux = apply_layer(slot_params[s], cfg, *body[s],
+                                             x, positions, mode, st)
+                outs.append(st_new if st_new is not None else ())
+                aux_c = aux_c + aux
+            return (x, aux_c), outs
+
+        xs = (params["stack"],
+              st_stacks if st_stacks is not None else [()] * period)
+        (x, aux_total), st_out = lax.scan(
+            body_fn, (x, aux_total), xs)
+        if states is not None:
+            for s in range(period):
+                for c in range(n_cycles):
+                    new_states[k_dense + c * period + s] = jax.tree.map(
+                        lambda a: a[c], st_out[s])
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if last_logits_only:
+        # serving prefill: only the last position feeds sampling — skip
+        # the (B, S, V) logit materialization entirely.
+        x = x[:, -1:]
+    logits = unembed(params, cfg, x)
+    return logits, new_states, aux_total
+
+
+def unembed(params, cfg: ModelConfig, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if logits.ndim == 3:
+        logits = L.constrain(logits, "dp", None, "tp")
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def mtp_logits(params, cfg: ModelConfig, hidden, batch):
+    """DeepSeek-V3 multi-token prediction head (depth 1): predict t+2
+    from [h_t ; embed(token_{t+1})]."""
+    mtp = params["mtp"]
+    tokens = batch["tokens"]
+    emb_next = params["embed"][tokens[:, 1:]]
+    h = hidden[:, :-1]
+    h2 = L.dense(mtp["proj"], jnp.concatenate([
+        L.apply_norm(mtp["norm"], h, cfg.norm), emb_next], -1))
+    B, S1 = tokens.shape[0], tokens.shape[1] - 1
+    positions = jnp.broadcast_to(jnp.arange(S1, dtype=jnp.int32)[None],
+                                 (B, S1))
+    plan = layer_plan(cfg)
+    h2, _, _ = _apply_layer(mtp["layer"], cfg, plan[-1][0], "mlp",
+                            h2, positions, "full", None)
+    return unembed(params, cfg, h2)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: dict, *,
+                   remat: bool = False, unroll: bool = False):
+    """Like forward() but also returns pre-unembed hidden states (for MTP)."""
+    plan = layer_plan(cfg)
+    k_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    period = _period(cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    apply_layer = (jax.checkpoint(_apply_layer, static_argnums=(1, 2, 3, 6),
+                                  prevent_cse=False)
+                   if remat else _apply_layer)
+    for i, lp in enumerate(params["prologue"]):
+        x, _, aux = apply_layer(lp, cfg, *plan[i], x, positions, "full", None)
+        aux_total += aux
+    body = plan[k_dense:]
+    n_cycles = len(body) // period
+
+    if unroll:
+        for c in range(n_cycles):
+            for s in range(period):
+                lp = jax.tree.map(lambda a: a[c], params["stack"][s])
+                x, _, aux = apply_layer(lp, cfg, *body[s], x, positions,
+                                        "full", None)
+                aux_total += aux
+    else:
+        def body_fn(carry, slot_params):
+            x, aux_c = carry
+            for s in range(period):
+                x, _, aux = apply_layer(slot_params[s], cfg, *body[s],
+                                        x, positions, "full", None)
+                aux_c = aux_c + aux
+            return (x, aux_c), ()
+
+        (x, aux_total), _ = lax.scan(body_fn, (x, aux_total), params["stack"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    return unembed(params, cfg, x), x, aux_total
+
+
+# ----------------------------------------------------------------------
+# decode states
+# ----------------------------------------------------------------------
+
+def init_states(cfg: ModelConfig, B: int, max_len: int,
+                dtype=jnp.bfloat16) -> list:
+    """Per-layer decode state in plan order."""
+    plan = layer_plan(cfg)
+    states = []
+    window = cfg.sliding_window
+    for mixer, _ in plan:
+        if mixer == "attn":
+            states.append(L.init_attn_cache(cfg, B, max_len, window=window,
+                                            dtype=dtype))
+        elif mixer == "attn_local":
+            w = cfg.rglru.local_window if cfg.rglru else cfg.sliding_window
+            states.append(L.init_attn_cache(cfg, B, max_len, window=w,
+                                            dtype=dtype))
+        elif mixer == "mla":
+            states.append(L.init_mla_cache(cfg, B, max_len, dtype=dtype))
+        elif mixer == "rglru":
+            states.append(L.init_rglru_state(cfg, B, dtype=dtype))
+        elif mixer == "ssd":
+            states.append(L.init_ssd_state(cfg, B, dtype=dtype))
+        else:
+            raise ValueError(mixer)
+    return states

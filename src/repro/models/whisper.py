@@ -1,0 +1,158 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the brief, the mel-spectrogram + conv feature extractor is NOT
+implemented — ``input_specs`` supplies (B, source_len, d_model) frame
+embeddings. This module implements the transformer: bidirectional
+encoder over frames, causal decoder with cross-attention, learned
+positional embeddings, LayerNorm + GELU + biases (whisper-tiny style),
+tied unembedding.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, padded_vocab
+from repro.models import layers as L
+
+MAX_TARGET_POSITIONS = 32_768   # generous; real whisper is 448
+
+
+def _sinusoid(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.norm_init(cfg.d_model, "layernorm"),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "mlp_norm": L.norm_init(cfg.d_model, "layernorm"),
+        "mlp": L.init_mlp(k2, cfg, dtype=dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": L.norm_init(cfg.d_model, "layernorm"),
+        "self": L.init_attention(k1, cfg, dtype),
+        "cross_norm": L.norm_init(cfg.d_model, "layernorm"),
+        "cross": L.init_attention(k2, cfg, dtype),
+        "mlp_norm": L.norm_init(cfg.d_model, "layernorm"),
+        "mlp": L.init_mlp(k3, cfg, dtype=dtype),
+    }
+
+
+def init_whisper(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    v = padded_vocab(cfg)
+    n_enc = cfg.encdec.num_layers
+    keys = jax.random.split(key, n_enc + cfg.num_layers + 2)
+    return {
+        "embed": (jax.random.normal(keys[-1], (v, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dtype),
+        "dec_pos": (jax.random.normal(
+            keys[-2], (MAX_TARGET_POSITIONS, cfg.d_model), jnp.float32)
+            * 0.02).astype(dtype),
+        "enc_layers": [_init_enc_layer(keys[i], cfg, dtype)
+                       for i in range(n_enc)],
+        "enc_norm": L.norm_init(cfg.d_model, "layernorm"),
+        "dec_layers": [_init_dec_layer(keys[n_enc + i], cfg, dtype)
+                       for i in range(cfg.num_layers)],
+        "dec_norm": L.norm_init(cfg.d_model, "layernorm"),
+    }
+
+
+def _bidir_attn(p, cfg, x):
+    """Non-causal encoder self-attention (dense — source_len is short)."""
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, H, Dh)
+    k = L.dense(p["wk"], x).reshape(B, S, KV, Dh)
+    v = L.dense(p["wv"], x).reshape(B, S, KV, Dh)
+    out = L._attend_dense(q, k, v, None, Dh ** -0.5)
+    return L.dense(p["wo"], out.reshape(B, S, H * Dh))
+
+
+def encode(params, cfg: ModelConfig, frame_embeds):
+    x = frame_embeds + _sinusoid(frame_embeds.shape[1],
+                                 cfg.d_model).astype(frame_embeds.dtype)[None]
+    for lp in params["enc_layers"]:
+        x = x + _bidir_attn(lp["attn"], cfg,
+                            L.apply_norm(lp["attn_norm"], x, "layernorm"))
+        x = x + L.mlp_apply(lp["mlp"], cfg,
+                            L.apply_norm(lp["mlp_norm"], x, "layernorm"))
+    return L.apply_norm(params["enc_norm"], x, "layernorm")
+
+
+def _cross_kv(p, cfg, enc_out):
+    B, S, _ = enc_out.shape
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    k = L.dense(p["wk"], enc_out).reshape(B, S, KV, Dh)
+    v = L.dense(p["wv"], enc_out).reshape(B, S, KV, Dh)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return k, v, pos
+
+
+def decode(params, cfg: ModelConfig, tokens, enc_out, *, mode="full",
+           states=None, positions=None):
+    """Teacher-forced decode (mode='full') or single step (mode='step').
+
+    states (step mode): list per layer of {"self": attn-cache,
+    "cross_k","cross_v"} built by init_whisper_states + encode.
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    x = params["embed"][tokens] + params["dec_pos"][positions]
+    new_states = [None] * len(params["dec_layers"])
+
+    def dec_layer(lp, x, ck, cv, cpos, self_state):
+        h, self_state = L.attention_apply(
+            lp["self"], cfg, L.apply_norm(lp["self_norm"], x, "layernorm"),
+            positions, mode=mode, state=self_state)
+        x = x + h
+        h, _ = L.attention_apply(
+            lp["cross"], cfg, L.apply_norm(lp["cross_norm"], x, "layernorm"),
+            positions, mode=mode, state=None, cross_kv=(ck, cv, cpos))
+        x = x + h
+        x = x + L.mlp_apply(lp["mlp"], cfg,
+                            L.apply_norm(lp["mlp_norm"], x, "layernorm"))
+        return x, self_state
+
+    if mode == "full" and tokens.shape[1] > 512:
+        dec_layer = jax.checkpoint(dec_layer)   # teacher-forcing remat
+
+    for i, lp in enumerate(params["dec_layers"]):
+        st = None if states is None else states[i]
+        self_state = None if st is None else st["self"]
+        if st is None:
+            ck, cv, cpos = _cross_kv(lp["cross"], cfg, enc_out)
+        else:
+            ck, cv = st["cross_k"], st["cross_v"]
+            cpos = jnp.broadcast_to(
+                jnp.arange(ck.shape[1], dtype=jnp.int32)[None], ck.shape[:2])
+        x, self_state = dec_layer(lp, x, ck, cv, cpos, self_state)
+        if st is not None:
+            new_states[i] = {"self": self_state, "cross_k": ck, "cross_v": cv}
+    x = L.apply_norm(params["dec_norm"], x, "layernorm")
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, new_states
+
+
+def init_whisper_states(params, cfg: ModelConfig, B: int, max_len: int,
+                        enc_out, dtype=jnp.bfloat16) -> list:
+    states = []
+    for lp in params["dec_layers"]:
+        ck, cv, _ = _cross_kv(lp["cross"], cfg, enc_out)
+        states.append({
+            "self": L.init_attn_cache(cfg, B, max_len, dtype=dtype),
+            "cross_k": ck, "cross_v": cv,
+        })
+    return states

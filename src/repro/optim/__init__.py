@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig  # noqa: F401
+from repro.optim.local_updates import LocalUpdatesConfig, local_updates_round  # noqa: F401
+from repro.optim.schedules import cosine_schedule  # noqa: F401

@@ -1,0 +1,43 @@
+"""Serving: batched prefill + single-token decode steps.
+
+``make_serve_step`` builds the jittable one-token step the decode
+dry-run shapes (decode_32k / long_500k) lower: one new token against a
+seq_len-long persistent state (KV cache / ring buffer / SSM state).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_serve_step(model):
+    def serve_step(params, states, tokens, positions):
+        logits, states = model.decode_step(
+            params, {"tokens": tokens, "positions": positions}, states)
+        return logits, states
+    return serve_step
+
+
+def greedy_generate(model, params, prompt_tokens, *, max_new: int = 16,
+                    max_len: int | None = None, batch_extras: dict | None = None):
+    """Prefill the prompt then greedily decode max_new tokens.
+
+    prompt_tokens: (B, S) int32. Returns (B, max_new) generated ids.
+    """
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + max_new)
+    extras = batch_extras or {}
+    states = model.init_states(params, B, max_len, batch=extras or None)
+    logits, states = model.prefill(
+        params, {"tokens": prompt_tokens, **extras}, states)
+    step = jax.jit(make_serve_step(model))
+    tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for t in range(S, S + max_new - 1):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, states = step(params, states, tok, pos)
+        tok = logits[:, -1].argmax(-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,47 @@
+"""Language-model losses: CE (+ z-loss) + MoE aux + optional MTP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 z_loss_coef: float = 1e-4):
+    """Mean next-token CE over valid positions; labels = -100 masked.
+    Returns (loss, metrics)."""
+    valid = labels >= 0
+    labels_safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels_safe[..., None], -1)[..., 0] - logz
+    n = jnp.maximum(valid.sum(), 1)
+    ce = -(ll * valid).sum() / n
+    zl = z_loss_coef * ((logz ** 2) * valid).sum() / n
+    acc = ((logits.argmax(-1) == labels_safe) & valid).sum() / n
+    return ce + zl, {"ce": ce, "z_loss": zl, "accuracy": acc}
+
+
+def lm_loss(model, params, batch, *, z_loss_coef: float = 1e-4,
+            mtp_coef: float = 0.3, unroll: bool = False, remat: bool = False):
+    """Full train loss for any registry model. batch needs tokens+labels
+    (labels already shifted; -100 = ignore)."""
+    cfg = model.cfg
+    if cfg.mtp_depth > 0:
+        logits, mtp_logits, aux = model.forward_train_mtp(
+            params, batch, unroll=unroll, remat=remat)
+        loss, metrics = softmax_xent(logits, batch["labels"], z_loss_coef)
+        # MTP predicts token t+2 from position t (labels shifted one more)
+        mtp_labels = jnp.concatenate(
+            [batch["labels"][:, 1:],
+             jnp.full_like(batch["labels"][:, :0], -100)], 1)[:, : mtp_logits.shape[1]]
+        mtp_loss, _ = softmax_xent(mtp_logits, mtp_labels, 0.0)
+        loss = loss + mtp_coef * mtp_loss + aux
+        metrics["mtp_loss"] = mtp_loss
+    else:
+        logits, aux = model.forward_train(params, batch, unroll=unroll,
+                                          remat=remat)
+        loss, metrics = softmax_xent(logits, batch["labels"], z_loss_coef)
+        loss = loss + aux
+    metrics["aux_loss"] = aux if cfg.mtp_depth == 0 else metrics.get(
+        "aux_loss", aux)
+    metrics["loss"] = loss
+    return loss, metrics

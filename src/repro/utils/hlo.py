@@ -1,0 +1,127 @@
+"""Parse optimized HLO text for collective-communication traffic.
+
+``compiled.as_text()`` (post-SPMD-partitioning HLO) is the only place the
+GSPMD-inserted collectives are visible.  Operand types are not inline in
+the text (``all-reduce(%wrapped_reduce)``), so we first build a symbol
+table mapping every instruction name to its result byte size, then sum
+operand sizes for every collective op.
+
+Ops counted: all-reduce, all-gather, reduce-scatter, all-to-all,
+collective-permute (and their -start async variants).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# `%name = dtype[d0,d1]{layout} opcode(...)`  (tuple results handled below)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^=]*?\)|[\w\[\],{}/:#\s]*?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*)$")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]\d*[a-z]*\d*(?:e\d+m\d+(?:fn)?)?)\[(?P<dims>[\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Aggregate collective traffic found in one HLO module."""
+    # op kind -> (count, total operand bytes, total result bytes)
+    by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(v[1] for v in self.by_kind.values())
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(v[2] for v in self.by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(v[0] for v in self.by_kind.values())
+
+    def add(self, kind: str, operand_bytes: int, result_bytes: int) -> None:
+        c, ob, rb = self.by_kind.get(kind, (0, 0, 0))
+        self.by_kind[kind] = (c + 1, ob + operand_bytes, rb + result_bytes)
+
+    def merged(self, other: "CollectiveStats", scale: float = 1.0) -> "CollectiveStats":
+        out = CollectiveStats(dict(self.by_kind))
+        for k, (c, ob, rb) in other.by_kind.items():
+            c0, ob0, rb0 = out.by_kind.get(k, (0, 0, 0))
+            out.by_kind[k] = (c0 + int(c * scale), ob0 + int(ob * scale), rb0 + int(rb * scale))
+        return out
+
+    def summary(self) -> str:
+        lines = []
+        for k, (c, ob, rb) in sorted(self.by_kind.items()):
+            lines.append(f"{k:20s} n={c:4d} operand={ob/1e6:10.2f}MB result={rb/1e6:10.2f}MB")
+        lines.append(f"{'TOTAL':20s} n={self.total_count:4d} "
+                     f"operand={self.total_operand_bytes/1e6:10.2f}MB "
+                     f"result={self.total_result_bytes/1e6:10.2f}MB")
+        return "\n".join(lines)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand/result sizes of every collective op in optimized HLO text."""
+    # Pass 1: symbol table  name -> result bytes.
+    sizes: dict[str, int] = {}
+    records = []  # (kind, operand_names, result_bytes)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group("name"), m.group("type"), m.group("op")
+        sizes[name] = _type_bytes(type_str)
+        base_op = op.replace("-start", "").replace("-done", "")
+        if base_op in COLLECTIVE_OPS and not op.endswith("-done"):
+            # operands: comma-separated %refs before the `)` that closes the call
+            ops_str = m.group("operands")
+            depth = 1
+            out = []
+            for ch in ops_str:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                out.append(ch)
+            operand_names = re.findall(r"%([\w.\-]+)", "".join(out))
+            records.append((base_op, operand_names, sizes[name]))
+    stats = CollectiveStats()
+    for kind, operand_names, result_bytes in records:
+        ob = sum(sizes.get(n, 0) for n in operand_names)
+        stats.add(kind, ob, result_bytes)
+    return stats
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Convenience: total operand bytes moved by collectives."""
+    return parse_collectives(hlo_text).total_operand_bytes

@@ -1,0 +1,41 @@
+"""Small pytree helpers shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape, dtype=np.int64)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_params(tree) -> int:
+    """Total element count of all array leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape, dtype=np.int64)) for l in leaves
+                   if hasattr(l, "shape")))
+
+
+def tree_allfinite(tree) -> jax.Array:
+    leaves = [jnp.all(jnp.isfinite(l)) for l in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)]
+    return jnp.all(jnp.stack(leaves)) if leaves else jnp.asarray(True)
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see ONE device (the dry-run fakes 512 in its own subprocess only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

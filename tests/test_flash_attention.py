@@ -1,0 +1,111 @@
+"""Flash attention (fwd + custom-vjp bwd) vs the dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _data(B, Sq, Skv, H, KV, D, Dv, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Skv, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Skv, KV, Dv)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+    return q, k, v, qp, kp
+
+
+def _ref(q, k, v, qp, kp, causal, window, scale, softcap=None):
+    m = jnp.ones((q.shape[0], 1, q.shape[1], k.shape[1]), bool)
+    if causal:
+        m &= (qp[:, :, None] >= kp[:, None, :])[:, None]
+    if window is not None:
+        m &= (qp[:, :, None] - window < kp[:, None, :])[:, None]
+    return L._attend_dense(q, k, v, m, scale, softcap)
+
+
+@pytest.mark.parametrize("B,S,H,KV,D,qc,kc", [
+    (1, 16, 4, 4, 8, 4, 4),
+    (2, 37, 8, 4, 16, 16, 8),      # ragged + GQA
+    (1, 64, 6, 2, 32, 64, 64),     # single chunk
+    (3, 20, 4, 1, 8, 7, 5),        # MQA + non-divisible chunks
+])
+def test_flash_forward_matches_dense(B, S, H, KV, D, qc, kc):
+    q, k, v, qp, kp = _data(B, S, S, H, KV, D, D, seed=S)
+    o1 = _ref(q, k, v, qp, kp, True, None, D ** -0.5)
+    o2 = L.flash_attention(q, k, v, q_pos=qp, kv_pos=kp, causal=True,
+                           window=None, scale=D ** -0.5, q_chunk=qc,
+                           kv_chunk=kc)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_grads_match_dense():
+    q, k, v, qp, kp = _data(2, 33, 33, 8, 4, 16, 16, seed=1)
+    ct = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (2, 33, 8, 16)), jnp.float32)
+
+    def f_ref(q, k, v):
+        return jnp.sum(_ref(q, k, v, qp, kp, True, None, 0.25) * ct)
+
+    def f_fl(q, k, v):
+        return jnp.sum(L.flash_attention(
+            q, k, v, q_pos=qp, kv_pos=kp, causal=True, window=None,
+            scale=0.25, q_chunk=8, kv_chunk=8) * ct)
+
+    g1 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_fl, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_window_and_softcap_grads():
+    q, k, v, qp, kp = _data(1, 29, 29, 4, 2, 8, 8, seed=3)
+    ct = jnp.ones((1, 29, 4, 8), jnp.float32)
+    kw = dict(q_pos=qp, kv_pos=kp, causal=True, window=7, scale=0.3,
+              q_chunk=8, kv_chunk=4, softcap=5.0)
+
+    def f_fl(q, k, v):
+        return jnp.sum(L.flash_attention(q, k, v, **kw) * ct)
+
+    def f_ref(q, k, v):
+        return jnp.sum(_ref(q, k, v, qp, kp, True, 7, 0.3, 5.0) * ct)
+
+    np.testing.assert_allclose(f_ref(q, k, v), f_fl(q, k, v), rtol=1e-5)
+    g1 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_fl, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_mla_asymmetric_head_dims():
+    """MLA uses D(qk)=48, Dv=32 — asymmetric dims must work."""
+    q, k, v, qp, kp = _data(1, 24, 24, 4, 4, 48, 32, seed=4)
+    o1 = _ref(q, k, v, qp, kp, True, None, 48 ** -0.5)
+    o2 = L.flash_attention(q, k, v, q_pos=qp, kv_pos=kp, causal=True,
+                           window=None, scale=48 ** -0.5, q_chunk=8,
+                           kv_chunk=8)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    B=st.integers(1, 3), S=st.integers(2, 48),
+    KV=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2, 3]),
+    D=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    window=st.one_of(st.none(), st.integers(2, 16)),
+    seed=st.integers(0, 1000),
+)
+def test_flash_property(B, S, KV, g, D, causal, window, seed):
+    H = KV * g
+    q, k, v, qp, kp = _data(B, S, S, H, KV, D, D, seed=seed)
+    o1 = _ref(q, k, v, qp, kp, causal, window, D ** -0.5)
+    o2 = L.flash_attention(q, k, v, q_pos=qp, kv_pos=kp, causal=causal,
+                           window=window, scale=D ** -0.5,
+                           q_chunk=16, kv_chunk=8)
+    if not causal and window is None:
+        pass  # fully dense rows — still fine
+    np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)

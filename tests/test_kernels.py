@@ -1,0 +1,125 @@
+"""Pallas SCD kernel vs the pure-jnp oracle: shape/dtype sweeps +
+hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import scd_steps_kernel, scd_steps_ref
+
+
+def _mk(m, n, H, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((m, n)), dtype)
+    colsq = jnp.sum(A.astype(jnp.float32) ** 2, axis=0)
+    alpha = jnp.asarray(rng.standard_normal(n) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, H), jnp.int32)
+    return A.astype(jnp.float32), colsq, alpha, w, idx
+
+
+@pytest.mark.parametrize("m,n,H,h_blk", [
+    (32, 16, 8, 8), (64, 64, 64, 16), (128, 96, 200, 64),
+    (256, 17, 7, 128), (512, 128, 333, 100), (33, 5, 1, 4),
+])
+def test_kernel_matches_oracle_shapes(m, n, H, h_blk):
+    A, colsq, alpha, w, idx = _mk(m, n, H, jnp.float32, seed=m + n + H)
+    kw = dict(sigma=8.0, lam=1.0, eta=1.0)
+    dv_r, a_r = scd_steps_ref(A, colsq, alpha, w, idx, **kw)
+    dv_k, a_k = scd_steps_kernel(A, colsq, alpha, w, idx, h_blk=h_blk, **kw)
+    np.testing.assert_allclose(dv_r, dv_k, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a_r, a_k, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("eta", [0.0, 0.3, 1.0])
+def test_kernel_matches_oracle_elastic_net(eta):
+    A, colsq, alpha, w, idx = _mk(96, 48, 120, jnp.float32, seed=11)
+    kw = dict(sigma=4.0, lam=2.5, eta=eta)
+    dv_r, a_r = scd_steps_ref(A, colsq, alpha, w, idx, **kw)
+    dv_k, a_k = scd_steps_kernel(A, colsq, alpha, w, idx, **kw)
+    np.testing.assert_allclose(dv_r, dv_k, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a_r, a_k, rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_bf16_stream_close_to_f32_oracle():
+    """bf16 column streaming with f32 accumulation stays near the oracle."""
+    rng = np.random.default_rng(5)
+    m, n, H = 128, 64, 96
+    A32 = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    Abf = A32.astype(jnp.bfloat16).astype(jnp.float32)  # quantized data
+    colsq = jnp.sum(Abf ** 2, axis=0)
+    alpha = jnp.zeros(n, jnp.float32)
+    w = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, H), jnp.int32)
+    kw = dict(sigma=8.0, lam=1.0, eta=1.0)
+    dv_r, a_r = scd_steps_ref(Abf, colsq, alpha, w, idx, **kw)
+    dv_k, a_k = scd_steps_kernel(Abf, colsq, alpha, w, idx, **kw)
+    np.testing.assert_allclose(dv_r, dv_k, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_duplicate_indices_sequential_semantics():
+    """Visiting the same coordinate twice must apply updates sequentially."""
+    A, colsq, alpha, w, _ = _mk(64, 8, 0, jnp.float32, seed=2)
+    idx = jnp.asarray([3, 3, 3, 5, 3, 5], jnp.int32)
+    kw = dict(sigma=2.0, lam=0.5, eta=0.8)
+    dv_r, a_r = scd_steps_ref(A, colsq, alpha, w, idx, **kw)
+    dv_k, a_k = scd_steps_kernel(A, colsq, alpha, w, idx, h_blk=4, **kw)
+    np.testing.assert_allclose(dv_r, dv_k, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(a_r, a_k, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_zero_column_noop():
+    """Padded (all-zero) columns must leave state untouched."""
+    A, colsq, alpha, w, _ = _mk(32, 6, 0, jnp.float32, seed=3)
+    A = A.at[:, 2].set(0.0)
+    colsq = colsq.at[2].set(0.0)
+    idx = jnp.asarray([2, 2, 2], jnp.int32)
+    dv, a_new = scd_steps_kernel(A, colsq, alpha, w, idx,
+                                 sigma=2.0, lam=1.0, eta=1.0)
+    np.testing.assert_allclose(dv, np.zeros(32), atol=1e-7)
+    np.testing.assert_allclose(a_new, alpha, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(8, 96),
+    n=st.integers(2, 48),
+    H=st.integers(1, 150),
+    sigma=st.floats(1.0, 16.0),
+    lam=st.floats(0.1, 4.0),
+    eta=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_oracle_property(m, n, H, sigma, lam, eta, seed):
+    A, colsq, alpha, w, idx = _mk(m, n, H, jnp.float32, seed=seed)
+    kw = dict(sigma=sigma, lam=lam, eta=eta)
+    dv_r, a_r = scd_steps_ref(A, colsq, alpha, w, idx, **kw)
+    dv_k, a_k = scd_steps_kernel(A, colsq, alpha, w, idx, h_blk=32, **kw)
+    np.testing.assert_allclose(dv_r, dv_k, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(a_r, a_k, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), H=st.integers(1, 64))
+def test_scd_decreases_subproblem_objective(seed, H):
+    """Each SCD epoch must not increase the local subproblem objective
+    G_k(dalpha) = w.A da + sigma/2 ||A da||^2 + reg(alpha+da) - reg(alpha)."""
+    rng = np.random.default_rng(seed)
+    m, n, sigma, lam, eta = 48, 24, 4.0, 1.0, 0.7
+    A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    colsq = jnp.sum(A * A, 0)
+    alpha0 = jnp.asarray(rng.standard_normal(n) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, H), jnp.int32)
+    dv, alpha1 = scd_steps_ref(A, colsq, alpha0, w, idx,
+                               sigma=sigma, lam=lam, eta=eta)
+
+    def G(alpha):
+        da = alpha - alpha0
+        Ada = A @ da
+        reg = lam * (eta / 2 * jnp.sum(alpha ** 2)
+                     + (1 - eta) * jnp.sum(jnp.abs(alpha)))
+        return float(w @ Ada + sigma / 2 * Ada @ Ada + reg)
+
+    assert G(np.asarray(alpha1)) <= G(np.asarray(alpha0)) + 1e-4

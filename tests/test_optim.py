@@ -1,0 +1,101 @@
+"""Optimizer + schedules + local-update (H-knob) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, LocalUpdatesConfig, adamw_init,
+                         adamw_update, cosine_schedule, local_updates_round)
+from repro.optim.local_updates import suggest_H
+
+
+def test_adamw_first_step_matches_reference():
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                      grad_clip=1e9)
+    p = {"w": jnp.asarray([[1.0, -2.0]])}
+    g = {"w": jnp.asarray([[0.5, -0.5]])}
+    st0 = adamw_init(p, cfg)
+    p1, st1, _ = adamw_update(p, g, st0, cfg, 1.0)
+    # bias-corrected first step = lr * sign-ish step g/|g|
+    expected = p["w"] - 0.1 * g["w"] / (jnp.abs(g["w"]) + 1e-8)
+    np.testing.assert_allclose(p1["w"], expected, rtol=1e-4)
+    assert int(st1["count"]) == 1
+
+
+def test_adamw_weight_decay_skips_1d():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=1e9)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    p1, _, _ = adamw_update(p, g, adamw_init(p, cfg), cfg, 1.0)
+    assert float(jnp.max(p1["w"])) < 1.0      # decayed
+    np.testing.assert_allclose(p1["b"], p["b"])  # not decayed
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0)
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw_update(p, g, adamw_init(p, cfg), cfg, 1.0)
+    assert float(m["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_quadratic_convergence():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(p, cfg)
+    for _ in range(400):
+        g = {"w": 2 * p["w"]}
+        p, state, _ = adamw_update(p, g, state, cfg, 1.0)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.05
+
+
+def test_cosine_schedule_shape():
+    s = [float(cosine_schedule(t, warmup=10, total=100)) for t in range(101)]
+    assert s[0] == 0.0 and abs(s[10] - 1.0) < 1e-5
+    assert all(a >= b - 1e-6 for a, b in zip(s[10:], s[11:]))  # decreasing
+    assert s[100] >= 0.099  # min_frac floor
+
+
+def test_local_updates_delta_vs_params_identical():
+    """'delta' and 'params' averaging must produce identical results for
+    any step function (algebraic identity)."""
+    def step_fn(p, o, b):
+        return jax.tree.map(lambda x: x - 0.1 * b, p), o, {}
+
+    p0 = {"w": jnp.asarray([1.0, 2.0])}
+    batches = jnp.asarray([0.5, 1.5, 1.0])
+    outs = {}
+    for avg in ("delta", "params"):
+        cfg = LocalUpdatesConfig(H=3, average=avg)
+        # axis_name=None -> no collective; compare the local math
+        p1, _, _ = local_updates_round(step_fn, p0, {}, batches, cfg, None)
+        outs[avg] = p1["w"]
+    np.testing.assert_allclose(outs["delta"], outs["params"])
+
+
+def test_local_updates_runs_H_steps():
+    def step_fn(p, o, b):
+        return jax.tree.map(lambda x: x + 1.0, p), o, {"v": p["w"][0]}
+
+    p0 = {"w": jnp.zeros((2,))}
+    batches = jnp.zeros((5,))
+    p1, _, ms = local_updates_round(step_fn, p0, {}, batches,
+                                    LocalUpdatesConfig(H=5), None)
+    np.testing.assert_allclose(p1["w"], 5.0)
+    assert ms["v"].shape == (5,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(t_comp=st.floats(1e-4, 1.0), t_coll=st.floats(1e-5, 10.0))
+def test_suggest_H_monotone_in_collective_cost(t_comp, t_coll):
+    h1 = suggest_H(t_comp, t_coll)
+    h2 = suggest_H(t_comp, t_coll * 4.0)
+    assert h2 >= h1 >= 1
+    assert h1 <= 64
+
+
+def test_suggest_H_paper_regimes():
+    # MPI-like: negligible comm -> H=1 (communicate every step)
+    assert suggest_H(1.0, 0.01) == 1
+    # Spark-like: comm 10x compute -> large H
+    assert suggest_H(0.1, 1.0) >= 8

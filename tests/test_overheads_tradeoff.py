@@ -1,0 +1,105 @@
+"""Framework-overhead model + H trade-off machinery (paper §5.2-§5.5)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.overheads import PROFILES, communicated_bytes_per_round
+from repro.core.tradeoff import (HSweep, HSweepPoint, autotune_H,
+                                 compute_fraction_at, optimal_H, time_to_eps)
+
+
+def test_profile_calibration_matches_paper_ratios():
+    A, B, C, D = (PROFILES["A_spark"], PROFILES["B_spark_c"],
+                  PROFILES["C_pyspark"], PROFILES["D_pyspark_c"])
+    Bo, Do, E = (PROFILES["B_spark_opt"], PROFILES["D_pyspark_opt"],
+                 PROFILES["E_mpi"])
+    # pySpark overheads ~15x Spark/Scala reference (paper Fig 3)
+    assert abs(C.overhead_units / A.overhead_units - 15.0) < 1e-6
+    # flat format: B = A/3
+    assert abs(A.overhead_units / B.overhead_units - 3.0) < 1e-6
+    # persistent+meta-RDD: B* = B/3, D* = D/10
+    assert abs(B.overhead_units / Bo.overhead_units - 3.0) < 1e-6
+    assert abs(D.overhead_units / Do.overhead_units - 10.0) < 1e-6
+    # MPI overhead ~3% of total at H=n_local (compute 1 unit)
+    frac = E.overhead_units / (E.compute_mult * 1.0 + E.overhead_units)
+    assert 0.02 < frac < 0.04
+    # C++ offload speedups: Scala ~10x, Python >100x
+    assert 8 < A.compute_mult / B.compute_mult < 12
+    assert C.compute_mult / D.compute_mult > 100
+
+
+def test_round_time_and_compute_fraction():
+    E = PROFILES["E_mpi"]
+    t = E.round_time(t_solver_s=1.0, t_ref_s=1.0)
+    assert abs(t - 1.031) < 1e-6
+    assert E.compute_fraction(1.0, 1.0) > 0.9  # paper: MPI ~90%+ computing
+    D = PROFILES["D_pyspark_c"]
+    assert D.compute_fraction(1.0, 1.0) < 0.1
+
+
+def test_communicated_bytes_persistent_vs_not():
+    m, n, K = 1000, 100000, 8
+    with_alpha = communicated_bytes_per_round(m, n, K, persistent_alpha=False)
+    without = communicated_bytes_per_round(m, n, K, persistent_alpha=True)
+    assert with_alpha - without == 2 * n * 8
+    assert without == 2 * K * m * 8
+
+
+def _toy_sweep():
+    """rounds_to_eps ~ c/H convergence; t_solver ~ linear in H."""
+    sweep = HSweep(eps=1e-3, n_local=1024, t_ref_s=1.0)
+    for H in (16, 64, 256, 1024, 4096):
+        rounds = int(np.ceil(20000 / H)) + 5   # diminishing returns
+        sweep.points.append(HSweepPoint(H, rounds, t_solver_s=H / 1024.0))
+    return sweep
+
+
+def test_optimal_H_grows_with_overhead():
+    """The paper's core claim: optimal H shifts up as per-round overhead
+    grows (Fig 6: >25x shift between implementations)."""
+    sweep = _toy_sweep()
+    h_mpi, _ = optimal_H(PROFILES["E_mpi"], sweep)
+    h_spark, _ = optimal_H(PROFILES["B_spark_c"], sweep)
+    h_pyspark, _ = optimal_H(PROFILES["D_pyspark_c"], sweep)
+    assert h_mpi <= h_spark <= h_pyspark
+    assert h_pyspark > h_mpi
+
+
+def test_mistuned_H_costs_big():
+    """Running MPI's optimal H on the pySpark profile (or vice versa)
+    degrades time-to-eps (paper: 'would more than double its training
+    time')."""
+    sweep = _toy_sweep()
+    h_mpi, t_mpi_at_own = optimal_H(PROFILES["E_mpi"], sweep)
+    h_py, t_py_at_own = optimal_H(PROFILES["D_pyspark_c"], sweep)
+    t_py_at_mpi_H = time_to_eps(
+        PROFILES["D_pyspark_c"],
+        next(p for p in sweep.points if p.H == h_mpi), sweep.t_ref_s)
+    assert t_py_at_mpi_H > 1.5 * t_py_at_own
+
+
+def test_compute_fraction_ordering_at_optimum():
+    sweep = _toy_sweep()
+    fr = {}
+    for name in ("E_mpi", "B_spark_c", "D_pyspark_c"):
+        h, _ = optimal_H(PROFILES[name], sweep)
+        fr[name] = compute_fraction_at(PROFILES[name], sweep, h)
+    # the optimal compute fraction decreases as overheads grow (Fig 7)
+    assert fr["E_mpi"] >= fr["B_spark_c"] >= fr["D_pyspark_c"] - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.floats(100.0, 50000.0), slope=st.floats(1e-4, 1e-1),
+       ovh=st.floats(1e-4, 10.0))
+def test_autotune_H_finds_convex_minimum(c, slope, ovh):
+    def rounds_fn(H):
+        return int(np.ceil(c / H)) + 3
+
+    def time_fn(H):
+        return slope * H + ovh
+
+    h = autotune_H(rounds_fn, time_fn, 1, 8192)
+    cost_h = rounds_fn(h) * time_fn(h)
+    # within 2x of grid optimum (golden section on noisy integer grid)
+    grid = [2 ** i for i in range(14)]
+    best = min(rounds_fn(g) * time_fn(g) for g in grid)
+    assert cost_h <= 2.05 * best
