@@ -10,6 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro.bench.registry import BenchContext, benchmark
 from repro.core import PROFILES
 from repro.core.baselines import MinibatchSGD, SGDConfig
 from repro.core.tradeoff import optimal_H, time_to_eps
@@ -17,30 +18,44 @@ from repro.core.tradeoff import optimal_H, time_to_eps
 IMPLS = ("A_spark", "B_spark_c", "C_pyspark", "D_pyspark_c",
          "B_spark_opt", "D_pyspark_opt", "E_mpi")
 
+# (batch_frac, step_size) grid for the tuned MLlib-style SGD baseline.
+SGD_GRID = ((0.1, 3e-4), (0.5, 3e-4), (1.0, 1e-3), (1.0, 3e-3))
 
-def main() -> list[dict]:
-    sweep = common.run_sweep()
-    rows = []
+
+@benchmark("convergence", figures="Fig 2+5",
+           description="time-to-eps per implementation vs MLlib-style SGD")
+def run(ctx: BenchContext) -> dict:
+    wl = common.workload(ctx.tier)
+    sweep = common.run_sweep(wl)
+    rows, timings, counters = [], {}, {}
+    t_opts = {}
     for name in IMPLS:
         p = PROFILES[name]
         h_opt, t_opt = optimal_H(p, sweep)
+        t_opts[name] = t_opt
         rows.append({"impl": name, "H_opt": h_opt,
-                     "time_to_eps_s": round(t_opt, 3)})
+                     "time_to_eps_s": round(t_opt, 4)})
+        timings[f"time_to_eps_{name}"] = t_opt
     by = {r["impl"]: r for r in rows}
-    t_mpi = by["E_mpi"]["time_to_eps_s"]
+    # ratios from the raw optima — the rounded display values can
+    # quantize to 0.0 at smoke-tier microsecond scales
+    t_mpi = t_opts["E_mpi"]
     for r in rows:
-        r["gap_vs_mpi"] = round(r["time_to_eps_s"] / t_mpi, 2)
+        r["gap_vs_mpi"] = round(t_opts[r["impl"]] / t_mpi, 2)
+        counters[f"gap_vs_mpi_{r['impl']}"] = r["gap_vs_mpi"]
 
-    # MLlib-style SGD baseline (Fig 5), tuned batch fraction
-    A, b, _ = common.problem()
-    tr = common.trainer(64)
+    # MLlib-style SGD baseline (Fig 5), tuned over a small grid; the smoke
+    # tier runs one setting to keep the gate in seconds.
+    A, b, _ = common.problem(wl)
+    tr = common.trainer(wl, 64)
+    grid = SGD_GRID[-1:] if ctx.tier == "smoke" else SGD_GRID
     best_sgd = np.inf
-    for bf, lr in ((0.1, 3e-4), (0.5, 3e-4), (1.0, 1e-3), (1.0, 3e-3)):
+    for bf, lr in grid:
         sgd = MinibatchSGD(SGDConfig(batch_frac=bf, step_size=lr,
-                                     lam=common.LAM, K=common.K), A, b)
-        hist = sgd.run(4000, p_star=tr.p_star, p_zero=tr.p_zero,
-                       record_every=25, target_eps=common.EPS)
-        r2e = hist.rounds_to(common.EPS)
+                                     lam=wl.lam, K=wl.K), A, b)
+        hist = sgd.run(wl.sgd_rounds, p_star=tr.p_star, p_zero=tr.p_zero,
+                       record_every=25, target_eps=wl.eps)
+        r2e = hist.rounds_to(wl.eps)
         if r2e is not None:
             # charge SGD the pySpark profile (it's the MLlib solver) with
             # its n-dim gradient communication per round
@@ -49,16 +64,28 @@ def main() -> list[dict]:
             best_sgd = min(best_sgd, t)
     rows.append({"impl": "MLlib_SGD(pyspark)",
                  "H_opt": "-",
-                 "time_to_eps_s": (round(best_sgd, 1)
+                 "time_to_eps_s": (round(best_sgd, 2)
                                    if np.isfinite(best_sgd) else "inf"),
                  "gap_vs_mpi": (round(best_sgd / t_mpi, 1)
                                 if np.isfinite(best_sgd) else "inf")})
-    common.emit("fig2_fig5_convergence", rows)
-    print(f"# paper headline: (A) vs MPI ~10x -> ours "
-          f"{by['A_spark']['gap_vs_mpi']}x; optimized (B)*/(D)* < 2x -> "
-          f"ours {by['B_spark_opt']['gap_vs_mpi']}x / "
-          f"{by['D_pyspark_opt']['gap_vs_mpi']}x")
-    return rows
+    if np.isfinite(best_sgd):
+        timings["time_to_eps_MLlib_SGD"] = float(best_sgd)
+    notes = [f"paper headline: (A) vs MPI ~10x -> ours "
+             f"{by['A_spark']['gap_vs_mpi']}x; optimized (B)*/(D)* < 2x -> "
+             f"ours {by['B_spark_opt']['gap_vs_mpi']}x / "
+             f"{by['D_pyspark_opt']['gap_vs_mpi']}x"]
+    return {"params": {"m": wl.m, "n": wl.n, "K": wl.K, "eps": wl.eps,
+                       "sgd_rounds": wl.sgd_rounds},
+            "timings_s": timings, "counters": counters,
+            "rows": rows, "notes": notes}
+
+
+def main() -> list[dict]:
+    out = run(BenchContext(tier="full"))
+    common.emit("fig2_fig5_convergence", out["rows"])
+    for note in out["notes"]:
+        print(f"# {note}")
+    return out["rows"]
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ framework profile's calibrated overhead.
 from __future__ import annotations
 
 from benchmarks import common
+from repro.bench.registry import BenchContext, benchmark
 from repro.core import PROFILES
 from repro.core.tradeoff import compute_fraction_at, optimal_H, time_to_eps
 
@@ -15,8 +16,15 @@ IMPLS = ("A_spark", "B_spark_c", "C_pyspark", "D_pyspark_c",
          "B_spark_opt", "D_pyspark_opt", "E_mpi")
 
 
-def main() -> list[dict]:
-    sweep = common.run_sweep()
+@benchmark("h_sweep", figures="Fig 6-7",
+           description="time-to-eps vs H and the per-framework optimum")
+def run(ctx: BenchContext) -> dict:
+    wl = common.workload(ctx.tier)
+    sweep = common.run_sweep(wl)
+    notes = []
+    if ctx.tier == "smoke":
+        notes += common.assert_rounds_in_band(wl, sweep)
+
     rows = []
     for name in IMPLS:
         p = PROFILES[name]
@@ -26,41 +34,58 @@ def main() -> list[dict]:
                 "H": pt.H,
                 "H_frac_nlocal": round(pt.H / sweep.n_local, 3),
                 "rounds_to_eps": pt.rounds_to_eps,
-                "t_solver_s": round(pt.t_solver_s, 5),
-                "time_to_eps_s": round(time_to_eps(p, pt, sweep.t_ref_s), 3),
+                "t_solver_s": round(pt.t_solver_s, 6),
+                "time_to_eps_s": round(time_to_eps(p, pt, sweep.t_ref_s), 4),
             })
-    common.emit("fig6_time_vs_H", rows)
 
-    rows2 = []
+    timings, counters = {"t_ref_solver": sweep.t_ref_s}, {}
+    opt_rows = []
     for name in IMPLS:
         p = PROFILES[name]
         h_opt, t_opt = optimal_H(p, sweep)
-        rows2.append({
+        opt_rows.append({
             "impl": name,
             "H_opt": h_opt,
             "H_opt_frac_nlocal": round(h_opt / sweep.n_local, 3),
-            "time_to_eps_s": round(t_opt, 3),
+            "time_to_eps_s": round(t_opt, 4),
             "compute_fraction_at_opt": round(
                 compute_fraction_at(p, sweep, h_opt), 3),
         })
-    common.emit("fig7_optimal_H", rows2)
+        timings[f"time_to_eps_{name}"] = t_opt
+        counters[f"H_opt_{name}"] = h_opt
+    for pt in sweep.points:
+        counters[f"rounds_to_eps_H{pt.H}"] = pt.rounds_to_eps
 
-    by = {r["impl"]: r for r in rows2}
+    by = {r["impl"]: r for r in opt_rows}
     shift = by["D_pyspark_c"]["H_opt"] / max(by["E_mpi"]["H_opt"], 1)
-    print(f"# optimal-H shift pySpark+C vs MPI = {shift:.0f}x "
-          f"(paper: >25x between implementations)")
-    print(f"# compute fraction at optimum: MPI "
-          f"{by['E_mpi']['compute_fraction_at_opt']:.2f} (paper ~0.9), "
-          f"pySpark+C {by['D_pyspark_c']['compute_fraction_at_opt']:.2f} "
-          f"(paper ~0.6)")
+    notes.append(f"optimal-H shift pySpark+C vs MPI = {shift:.0f}x "
+                 f"(paper: >25x between implementations)")
+    notes.append(f"compute fraction at optimum: MPI "
+                 f"{by['E_mpi']['compute_fraction_at_opt']:.2f} (paper ~0.9), "
+                 f"pySpark+C {by['D_pyspark_c']['compute_fraction_at_opt']:.2f}"
+                 f" (paper ~0.6)")
     # mis-tuning cost (paper: using (E)'s H on (D) 'more than doubles')
     pt_mpiH = next(p_ for p_ in sweep.points
                    if p_.H == by["E_mpi"]["H_opt"])
     t_mis = time_to_eps(PROFILES["D_pyspark_c"], pt_mpiH, sweep.t_ref_s)
-    print(f"# (D) at MPI's H*: {t_mis:.1f}s vs own optimum "
-          f"{by['D_pyspark_c']['time_to_eps_s']}s "
-          f"({t_mis / by['D_pyspark_c']['time_to_eps_s']:.2f}x worse)")
-    return rows2
+    notes.append(f"(D) at MPI's H*: {t_mis:.2f}s vs own optimum "
+                 f"{by['D_pyspark_c']['time_to_eps_s']}s "
+                 f"({t_mis / by['D_pyspark_c']['time_to_eps_s']:.2f}x worse)")
+    return {"params": {"m": wl.m, "n": wl.n, "K": wl.K,
+                       "h_grid": common.h_grid(wl), "eps": wl.eps},
+            "timings_s": timings, "counters": counters,
+            "rows": rows + opt_rows, "notes": notes}
+
+
+def main() -> list[dict]:
+    out = run(BenchContext(tier="full"))
+    sweep_rows = [r for r in out["rows"] if "H" in r]
+    opt_rows = [r for r in out["rows"] if "H_opt" in r]
+    common.emit("fig6_time_vs_H", sweep_rows)
+    common.emit("fig7_optimal_H", opt_rows)
+    for note in out["notes"]:
+        print(f"# {note}")
+    return opt_rows
 
 
 if __name__ == "__main__":

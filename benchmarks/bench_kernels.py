@@ -1,52 +1,57 @@
 """Kernel microbenchmark: Pallas SCD (interpret on CPU; compiled on TPU)
-vs the pure-jnp oracle. Prints name,us_per_call,derived CSV."""
+vs the pure-jnp oracle, timed under the harness's warmup/repeat/min
+discipline."""
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.bench.registry import BenchContext, benchmark
+from repro.bench.timing import TimingPolicy, time_callable
 from repro.kernels import scd_steps_kernel, scd_steps_ref
 
 
-def _time(fn, *args, reps=5, **kw) -> float:
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
-def main() -> list[dict]:
-    rng = np.random.default_rng(0)
-    rows = []
-    for (m, n, H) in ((256, 256, 256), (512, 256, 512), (1024, 512, 1024)):
+@benchmark("kernels", figures="§kernels",
+           description="Pallas SCD kernel vs jnp oracle microbench")
+def run(ctx: BenchContext) -> dict:
+    wl = common.workload(ctx.tier)
+    reps = ctx.repeats or max(wl.reps, 2)
+    policy = TimingPolicy(warmup=1, reps=reps)
+    rng = np.random.default_rng(ctx.seed)
+    rows, timings, counters = [], {}, {}
+    for (m, n, H) in wl.kernel_shapes:
         A = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
         colsq = jnp.sum(A * A, 0)
         alpha = jnp.zeros(n, jnp.float32)
         w = jnp.asarray(rng.standard_normal(m), jnp.float32)
         idx = jnp.asarray(rng.integers(0, n, H), jnp.int32)
         kw = dict(sigma=8.0, lam=1.0, eta=1.0)
-        t_ref = _time(scd_steps_ref, A, colsq, alpha, w, idx, **kw)
-        t_ker = _time(scd_steps_kernel, A, colsq, alpha, w, idx, **kw)
+        t_ref = time_callable(scd_steps_ref, A, colsq, alpha, w, idx,
+                              policy=policy, **kw)
+        t_ker = time_callable(scd_steps_kernel, A, colsq, alpha, w, idx,
+                              policy=policy, **kw)
         flops = 4.0 * m * H  # dot + axpy per step
-        rows.append({"name": f"scd_ref_m{m}_H{H}",
-                     "us_per_call": round(t_ref * 1e6, 1),
-                     "derived": f"{flops / t_ref / 1e9:.2f}GFLOP/s"})
-        rows.append({"name": f"scd_pallas_interp_m{m}_H{H}",
-                     "us_per_call": round(t_ker * 1e6, 1),
-                     "derived": f"{flops / t_ker / 1e9:.2f}GFLOP/s"})
-    common.emit("kernels", rows)
-    print("# NOTE: pallas numbers are interpret-mode (CPU emulation) — "
-          "correctness benchmark, not TPU speed")
-    return rows
+        for label, t in (("scd_ref", t_ref), ("scd_pallas_interp", t_ker)):
+            rows.append({"name": f"{label}_m{m}_H{H}",
+                         "us_per_call": round(t * 1e6, 1),
+                         "derived": f"{flops / t / 1e9:.2f}GFLOP/s"})
+            timings[f"{label}_m{m}_H{H}"] = t
+            counters[f"gflops_{label}_m{m}_H{H}"] = round(flops / t / 1e9, 3)
+    notes = ["pallas numbers are interpret-mode (CPU emulation) — "
+             "correctness benchmark, not TPU speed"]
+    return {"params": {"shapes": [list(s) for s in wl.kernel_shapes],
+                       "reps": reps},
+            "timings_s": timings, "counters": counters,
+            "rows": rows, "notes": notes}
+
+
+def main() -> list[dict]:
+    out = run(BenchContext(tier="full"))
+    common.emit("kernels", out["rows"])
+    for note in out["notes"]:
+        print(f"# {note}")
+    return out["rows"]
 
 
 if __name__ == "__main__":

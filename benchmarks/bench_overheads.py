@@ -3,72 +3,92 @@
 T_worker is MEASURED (our Pallas SCD solver plays the C++ module, scaled
 by the calibrated compute multipliers for Scala/Python); T_overhead is
 the calibrated framework overhead; T_master is measured (the w-update).
-100 rounds at H = n_local, exactly the paper's measurement setting.
+``decomp_rounds`` rounds at H = n_local, the paper's measurement setting.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.bench.registry import BenchContext, benchmark
+from repro.bench.timing import TimingPolicy, time_callable
 from repro.core import PROFILES
 from repro.core.overheads import communicated_bytes_per_round
 from repro.core.tradeoff import measure_solver_time
 
-ROUNDS = 100
 ORDER = ("A_spark", "B_spark_c", "C_pyspark", "D_pyspark_c", "E_mpi")
 OPT = ("B_spark_opt", "D_pyspark_opt")
 
 
-def _measure_master_time() -> float:
+def _measure_master_time(wl: common.Workload, reps: int) -> float:
     """The master's work: summing K m-vectors + the w update."""
-    dv = jnp.ones((common.K, common.M), jnp.float32)
-    w = jnp.zeros((common.M,), jnp.float32)
+    dv = jnp.ones((wl.K, wl.m), jnp.float32)
+    w = jnp.zeros((wl.m,), jnp.float32)
     f = jax.jit(lambda w, dv: w + dv.sum(0))
-    f(w, dv).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(50):
-        w = f(w, dv)
-    w.block_until_ready()
-    return (time.perf_counter() - t0) / 50
+    return time_callable(f, w, dv, policy=TimingPolicy(warmup=1,
+                                                       reps=max(reps, 3) * 10))
 
 
-def main(optimized: bool = True) -> list[dict]:
-    nl = common.n_local()
-    tr = common.trainer(nl)
-    t_ref = measure_solver_time(tr, nl, reps=2)
-    t_master = _measure_master_time()
-    rows = []
-    for name in ORDER + (OPT if optimized else ()):
+@benchmark("overheads", figures="Fig 3-4",
+           description="T_tot decomposition per implementation (A)-(E)")
+def run(ctx: BenchContext) -> dict:
+    wl = common.workload(ctx.tier)
+    reps = ctx.repeats or wl.reps
+    rounds = wl.decomp_rounds
+    nl = common.n_local(wl)
+    tr = common.trainer(wl, nl)
+    t_ref = measure_solver_time(tr, nl, reps=reps)
+    t_master = _measure_master_time(wl, reps)
+    rows, timings, counters = [], {}, {}
+    for name in ORDER + OPT:
         p = PROFILES[name]
-        t_worker = p.compute_mult * t_ref * ROUNDS
-        t_overhead = p.overhead_units * t_ref * ROUNDS
+        t_worker = p.compute_mult * t_ref * rounds
+        t_overhead = p.overhead_units * t_ref * rounds
+        t_total = t_worker + t_overhead + t_master * rounds
         comm = communicated_bytes_per_round(
-            common.M, common.N, common.K, p.persistent_alpha)
+            wl.m, wl.n, wl.K, p.persistent_alpha)
         rows.append({
             "impl": name,
-            "t_worker_s": round(t_worker, 3),
-            "t_master_s": round(t_master * ROUNDS, 4),
-            "t_overhead_s": round(t_overhead, 3),
-            "t_total_s": round(t_worker + t_overhead + t_master * ROUNDS, 3),
+            "t_worker_s": round(t_worker, 5),
+            "t_master_s": round(t_master * rounds, 6),
+            "t_overhead_s": round(t_overhead, 5),
+            "t_total_s": round(t_total, 5),
             "overhead_frac": round(t_overhead / (t_worker + t_overhead), 3),
             "comm_bytes_per_round": comm,
         })
-    common.emit("fig3_fig4_overheads", rows)
+        timings[f"t_total_{name}"] = t_total
+        counters[f"comm_bytes_per_round_{name}"] = comm
+    timings["t_ref_solver"] = t_ref
+    timings["t_master_step"] = t_master
+
     # paper-claim checks
     by = {r["impl"]: r for r in rows}
     ratio = by["C_pyspark"]["t_overhead_s"] / by["A_spark"]["t_overhead_s"]
-    print(f"# pySpark/Spark overhead ratio = {ratio:.1f}x (paper: 15x)")
     mpi_frac = by["E_mpi"]["t_overhead_s"] / by["E_mpi"]["t_total_s"]
-    print(f"# MPI overhead fraction = {mpi_frac:.3f} (paper: ~0.03)")
-    if optimized:
-        r1 = by["B_spark_c"]["t_overhead_s"] / by["B_spark_opt"]["t_overhead_s"]
-        r2 = by["D_pyspark_c"]["t_overhead_s"] / by["D_pyspark_opt"]["t_overhead_s"]
-        print(f"# persistent-mem+meta-RDD overhead cuts: Scala {r1:.1f}x "
-              f"(paper 3x), Python {r2:.1f}x (paper 10x)")
-    return rows
+    r1 = by["B_spark_c"]["t_overhead_s"] / by["B_spark_opt"]["t_overhead_s"]
+    r2 = by["D_pyspark_c"]["t_overhead_s"] / by["D_pyspark_opt"]["t_overhead_s"]
+    notes = [
+        f"pySpark/Spark overhead ratio = {ratio:.1f}x (paper: 15x)",
+        f"MPI overhead fraction = {mpi_frac:.3f} (paper: ~0.03)",
+        f"persistent-mem+meta-RDD overhead cuts: Scala {r1:.1f}x (paper 3x), "
+        f"Python {r2:.1f}x (paper 10x)",
+    ]
+    counters["pyspark_spark_overhead_ratio"] = round(ratio, 2)
+    counters["mpi_overhead_fraction"] = round(mpi_frac, 4)
+    return {"params": {"m": wl.m, "n": wl.n, "K": wl.K, "rounds": rounds,
+                       "H": nl},
+            "timings_s": timings, "counters": counters,
+            "rows": rows, "notes": notes}
+
+
+def main() -> list[dict]:
+    """Standalone CLI (legacy): full tier + the CSV emitter."""
+    out = run(BenchContext(tier="full"))
+    common.emit("fig3_fig4_overheads", out["rows"])
+    for note in out["notes"]:
+        print(f"# {note}")
+    return out["rows"]
 
 
 if __name__ == "__main__":

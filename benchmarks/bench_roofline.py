@@ -1,6 +1,8 @@
 """Roofline table: reads results/roofline/*.json produced by
 `python -m repro.launch.roofline --all` (run separately with the
-512-device flag) and prints §Roofline rows."""
+512-device flag) and reports §Roofline rows. Skips cleanly (status
+"skipped") when no artifacts exist — the smoke tier does not run the
+512-device dry-run."""
 from __future__ import annotations
 
 import glob
@@ -8,15 +10,22 @@ import json
 import os
 
 from benchmarks import common
+from repro.bench.registry import BenchContext, benchmark
+
+ROOFLINE_DIR = os.environ.get("ROOFLINE_OUT", "results/roofline")
 
 
-def main() -> list[dict]:
-    files = sorted(glob.glob("results/roofline/*.json"))
+@benchmark("roofline", figures="§roofline",
+           description="roofline table from launch.roofline artifacts")
+def run(ctx: BenchContext) -> dict:
+    files = sorted(glob.glob(os.path.join(ROOFLINE_DIR, "*.json")))
     if not files:
-        print("# no roofline results found — run "
-              "`PYTHONPATH=src python -m repro.launch.roofline --all` first")
-        return []
-    rows = []
+        return {"status": "skipped",
+                "params": {"roofline_dir": ROOFLINE_DIR},
+                "notes": ["no roofline results found — run "
+                          "`PYTHONPATH=src python -m repro.launch.roofline "
+                          "--all` first"]}
+    rows, timings, counters = [], {}, {}
     for f in files:
         r = json.load(open(f))
         if r.get("status") != "ok":
@@ -33,8 +42,22 @@ def main() -> list[dict]:
             "dominant": r["dominant"],
             "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
         })
-    common.emit("roofline", rows)
-    return rows
+        tag = f"{r['arch']}_{r['shape']}"
+        timings[f"roofline_total_{tag}"] = (r["compute_s"] + r["memory_s"]
+                                            + r["collective_s"])
+        counters[f"useful_flops_ratio_{tag}"] = r["useful_flops_ratio"]
+    return {"params": {"roofline_dir": ROOFLINE_DIR, "files": len(files)},
+            "timings_s": timings, "counters": counters, "rows": rows,
+            "notes": []}
+
+
+def main() -> list[dict]:
+    out = run(BenchContext(tier="full"))
+    for note in out["notes"]:
+        print(f"# {note}")
+    if out.get("rows"):
+        common.emit("roofline", out["rows"])
+    return out.get("rows", [])
 
 
 if __name__ == "__main__":

@@ -3,33 +3,55 @@ point, per framework profile + the zero-overhead ideal."""
 from __future__ import annotations
 
 from benchmarks import common
+from repro.bench.registry import BenchContext, benchmark
 from repro.core import PROFILES
 from repro.core.tradeoff import optimal_H
 
-KS = (2, 4, 8, 16)
 IMPLS = ("B_spark_c", "D_pyspark_opt", "E_mpi")
 
 
-def main() -> list[dict]:
-    rows = []
-    for K_ in KS:
-        sweep = common.run_sweep(K_=K_)
+@benchmark("scaling", figures="Fig 8",
+           description="time-to-eps vs worker count, H re-optimized")
+def run(ctx: BenchContext) -> dict:
+    wl = common.workload(ctx.tier)
+    rows, timings, counters = [], {}, {}
+    for K_ in wl.scaling_ks:
+        sweep = common.run_sweep(wl, K_=K_)
         # zero-overhead ideal (the paper's dashed line): compute only
         ideal = min((pt.rounds_to_eps * pt.t_solver_s
                      for pt in sweep.points if pt.rounds_to_eps), default=None)
         for name in IMPLS:
             h_opt, t_opt = optimal_H(PROFILES[name], sweep)
             rows.append({"K": K_, "impl": name, "H_opt": h_opt,
-                         "time_to_eps_s": round(t_opt, 3)})
-        rows.append({"K": K_, "impl": "ideal_no_comm", "H_opt": "-",
-                     "time_to_eps_s": round(ideal, 3)})
-    common.emit("fig8_scaling", rows)
-    # scaling verdict per impl
+                         "time_to_eps_s": round(t_opt, 4)})
+            timings[f"time_to_eps_K{K_}_{name}"] = t_opt
+            counters[f"H_opt_K{K_}_{name}"] = h_opt
+        if ideal is not None:
+            rows.append({"K": K_, "impl": "ideal_no_comm", "H_opt": "-",
+                         "time_to_eps_s": round(ideal, 4)})
+            timings[f"time_to_eps_K{K_}_ideal"] = ideal
+    notes = []
     for name in IMPLS + ("ideal_no_comm",):
         ts = [r["time_to_eps_s"] for r in rows if r["impl"] == name]
-        print(f"# {name}: K=2 -> {ts[0]}s, K={KS[-1]} -> {ts[-1]}s "
-              f"(speedup {ts[0] / ts[-1]:.2f}x)")
-    return rows
+        if not ts:
+            notes.append(f"{name}: no K reached eps in {wl.max_rounds} rounds")
+            continue
+        notes.append(f"{name}: K={wl.scaling_ks[0]} -> {ts[0]}s, "
+                     f"K={wl.scaling_ks[-1]} -> {ts[-1]}s "
+                     f"(speedup {ts[0] / ts[-1]:.2f}x)")
+        counters[f"speedup_{name}"] = round(ts[0] / ts[-1], 3)
+    return {"params": {"m": wl.m, "n": wl.n, "Ks": list(wl.scaling_ks),
+                       "eps": wl.eps},
+            "timings_s": timings, "counters": counters,
+            "rows": rows, "notes": notes}
+
+
+def main() -> list[dict]:
+    out = run(BenchContext(tier="full"))
+    common.emit("fig8_scaling", out["rows"])
+    for note in out["notes"]:
+        print(f"# {note}")
+    return out["rows"]
 
 
 if __name__ == "__main__":

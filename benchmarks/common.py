@@ -1,13 +1,20 @@
-"""Shared setup for the paper-figure benchmarks.
+"""Shared, tier-aware fixtures for the paper-figure benchmarks.
 
 The workload mirrors the paper's webspam ridge regression at CPU-feasible
-scale (see DESIGN.md §2): K=8 workers, eps=1e-3, H in fractions of
-n_local, overhead profiles (A)-(E) calibrated to Fig 3.
+scale (see DESIGN.md §2): K workers, eps target, H in fractions of
+n_local, overhead profiles (A)-(E) calibrated to Fig 3. Three tiers:
+
+  * ``smoke`` — seconds, fixed seeds, tiny m/n/H grid; the CI gate.
+  * ``quick`` — minutes; the dev loop.
+  * ``full``  — the paper-figure setting (the old hard-coded constants).
+
+Problems and H-sweeps are cached per (tier, K, solver) so benchmarks that
+share a sweep (h_sweep, convergence, scaling) pay for it once per run.
 """
 from __future__ import annotations
 
 import os
-import time
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -15,15 +22,67 @@ from repro.core import CoCoAConfig, CoCoATrainer
 from repro.core.tradeoff import HSweep, HSweepPoint, measure_solver_time
 from repro.data import make_glm_data
 
-EPS = 1e-3
-K = 8
-M, N = 512, 2048
-LAM = 1.0
-H_FRACS = (0.05, 0.2, 1.0, 4.0, 16.0)   # x n_local, the paper's Fig-6 axis
 RESULTS_DIR = os.environ.get("BENCH_OUT", "results/bench")
 
 
+@dataclass(frozen=True)
+class Workload:
+    """One tier's problem sizes and measurement effort."""
+    m: int
+    n: int
+    K: int
+    density: float
+    eps: float
+    lam: float
+    h_fracs: tuple          # x n_local — the paper's Fig-6 axis
+    max_rounds: int
+    decomp_rounds: int      # rounds in the Fig-3 decomposition
+    sgd_rounds: int         # MLlib-SGD baseline budget (Fig 5)
+    scaling_ks: tuple       # worker counts for Fig 8
+    kernel_shapes: tuple    # (m, n, H) triples for the microbench
+    reps: int               # timing repetitions
+    seed: int = 42
+    # smoke-tier tolerance band on measured rounds-to-eps at H = n_local
+    # (deterministic given the fixed seeds; band is ~3x around measured)
+    rounds_band: tuple = (1, 10_000)
+
+
+WORKLOADS: dict[str, Workload] = {
+    "smoke": Workload(
+        m=96, n=256, K=4, density=0.2, eps=1e-3, lam=1.0,
+        h_fracs=(0.2, 1.0, 4.0), max_rounds=400,
+        decomp_rounds=10, sgd_rounds=400, scaling_ks=(2, 4),
+        kernel_shapes=((64, 64, 64), (128, 64, 128)),
+        reps=1, rounds_band=(2, 180)),
+    "quick": Workload(
+        m=256, n=1024, K=8, density=0.15, eps=1e-3, lam=1.0,
+        h_fracs=(0.05, 0.2, 1.0, 4.0), max_rounds=1000,
+        decomp_rounds=50, sgd_rounds=2000, scaling_ks=(2, 4, 8),
+        kernel_shapes=((256, 256, 256), (512, 256, 512)),
+        reps=2),
+    "full": Workload(
+        m=512, n=2048, K=8, density=0.15, eps=1e-3, lam=1.0,
+        h_fracs=(0.05, 0.2, 1.0, 4.0, 16.0), max_rounds=1500,
+        decomp_rounds=100, sgd_rounds=4000, scaling_ks=(2, 4, 8, 16),
+        kernel_shapes=((256, 256, 256), (512, 256, 512), (1024, 512, 1024)),
+        reps=2),
+}
+
+# Back-compat aliases (the old module-level constants = the full tier).
+_FULL = WORKLOADS["full"]
+EPS, K, M, N, LAM, H_FRACS = (_FULL.eps, _FULL.K, _FULL.m, _FULL.n,
+                              _FULL.lam, _FULL.h_fracs)
+
+
+def workload(tier: str = "full") -> Workload:
+    if tier not in WORKLOADS:
+        raise KeyError(f"unknown tier {tier!r}; known: {list(WORKLOADS)}")
+    return WORKLOADS[tier]
+
+
 def emit(name: str, rows: list[dict]) -> None:
+    """Legacy CSV emitter (the standalone `python benchmarks/bench_X.py`
+    path); the harness writes BENCH_<name>.json instead."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     keys = list(rows[0].keys())
     lines = [",".join(keys)]
@@ -37,49 +96,85 @@ def emit(name: str, rows: list[dict]) -> None:
         print(line)
 
 
-_CACHE: dict = {}
+_PROBLEMS: dict = {}
+_SWEEPS: dict = {}
 
 
-def problem():
-    if "data" not in _CACHE:
-        _CACHE["data"] = make_glm_data(m=M, n=N, density=0.15, zipf_a=1.1,
-                                       seed=42)
-    return _CACHE["data"]
+def problem(wl: Workload):
+    key = (wl.m, wl.n, wl.density, wl.seed)
+    if key not in _PROBLEMS:
+        _PROBLEMS[key] = make_glm_data(m=wl.m, n=wl.n, density=wl.density,
+                                       zipf_a=1.1, seed=wl.seed)
+    return _PROBLEMS[key]
 
 
-def n_local() -> int:
-    return N // K
+def n_local(wl: Workload, K_: int | None = None) -> int:
+    return int(np.ceil(wl.n / (K_ or wl.K)))
 
 
-def h_grid() -> list[int]:
-    return [max(1, int(f * n_local())) for f in H_FRACS]
+def h_grid(wl: Workload, K_: int | None = None) -> list[int]:
+    nl = n_local(wl, K_)
+    return [max(1, int(f * nl)) for f in wl.h_fracs]
 
 
-def trainer(H: int, solver: str = "scd_kernel", K_: int = K,
-            seed: int = 0) -> CoCoATrainer:
-    A, b, _ = problem()
+def trainer(wl: Workload, H: int, solver: str = "scd_kernel",
+            K_: int | None = None, seed: int = 0,
+            comm_scheme: str = "persistent") -> CoCoATrainer:
+    A, b, _ = problem(wl)
     return CoCoATrainer(
-        CoCoAConfig(K=K_, H=H, lam=LAM, eta=1.0, solver=solver, seed=seed),
+        CoCoAConfig(K=K_ or wl.K, H=H, lam=wl.lam, eta=1.0, solver=solver,
+                    comm_scheme=comm_scheme, seed=seed),
         A, b)
 
 
-def run_sweep(K_: int = K, solver: str = "scd_kernel",
-              max_rounds: int = 1500) -> HSweep:
-    """Measured rounds-to-eps + solver wall time per H (paper Fig 6 raw).
+def run_sweep(wl: Workload, K_: int | None = None,
+              solver: str = "scd_kernel") -> HSweep:
+    """Measured rounds-to-eps + solver wall time per H (paper Fig 6 raw),
+    cached per (tier workload, K, solver).
 
-    The K virtual workers execute SERIALLY on this 1-core host, so the
-    measured per-round solver time is divided by K to model the real
-    cluster where workers run concurrently (the paper's setting).
+    The K virtual workers execute SERIALLY on this host, so the measured
+    per-round solver time is divided by K to model the real cluster where
+    workers run concurrently (the paper's setting).
     """
-    A, b, _ = problem()
-    nl = int(np.ceil(N / K_))
-    sweep = HSweep(eps=EPS, n_local=nl)
-    for frac in H_FRACS:
-        H = max(1, int(frac * nl))
-        tr = trainer(H, solver, K_)
-        hist = tr.run(max_rounds, record_every=1, target_eps=EPS)
-        t_s = measure_solver_time(tr, H, reps=2) / K_
-        sweep.points.append(HSweepPoint(H, hist.rounds_to(EPS), t_s))
-    sweep.t_ref_s = measure_solver_time(trainer(nl, solver, K_), nl,
-                                        reps=2) / K_
+    K_ = K_ or wl.K
+    key = (wl, K_, solver)
+    if key in _SWEEPS:
+        return _SWEEPS[key]
+    nl = n_local(wl, K_)
+    sweep = HSweep(eps=wl.eps, n_local=nl)
+    for H in h_grid(wl, K_):
+        tr = trainer(wl, H, solver, K_)
+        hist = tr.run(wl.max_rounds, record_every=1, target_eps=wl.eps)
+        t_s = measure_solver_time(tr, H, reps=wl.reps) / K_
+        sweep.points.append(HSweepPoint(H, hist.rounds_to(wl.eps), t_s))
+    sweep.t_ref_s = measure_solver_time(trainer(wl, nl, solver, K_), nl,
+                                        reps=wl.reps) / K_
+    _SWEEPS[key] = sweep
     return sweep
+
+
+def assert_rounds_in_band(wl: Workload, sweep: HSweep) -> list[str]:
+    """Smoke-tier convergence sanity: every grid point reaches eps, the
+    H = n_local point lands in the calibrated band, and more local work
+    never needs (materially) more rounds. Returns human-readable notes;
+    raises AssertionError when the band is violated."""
+    notes = []
+    lo, hi = wl.rounds_band
+    for pt in sweep.points:
+        assert pt.rounds_to_eps is not None, (
+            f"H={pt.H} did not reach eps={wl.eps} in {wl.max_rounds} rounds")
+    ref = next((p for p in sweep.points if p.H == sweep.n_local), None)
+    if ref is not None:
+        assert lo <= ref.rounds_to_eps <= hi, (
+            f"rounds_to_eps at H=n_local is {ref.rounds_to_eps}, outside "
+            f"the calibrated band [{lo}, {hi}]")
+        notes.append(f"rounds_to_eps(H=n_local)={ref.rounds_to_eps} "
+                     f"within band [{lo}, {hi}]")
+    by_h = sorted(sweep.points, key=lambda p: p.H)
+    assert by_h[-1].rounds_to_eps <= 1.2 * by_h[0].rounds_to_eps + 2, (
+        f"more local work should not need more rounds: "
+        f"H={by_h[0].H} -> {by_h[0].rounds_to_eps}, "
+        f"H={by_h[-1].H} -> {by_h[-1].rounds_to_eps}")
+    notes.append("rounds-to-eps monotone-ish in H "
+                 f"({by_h[0].rounds_to_eps} -> {by_h[-1].rounds_to_eps})")
+    return notes

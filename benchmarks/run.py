@@ -1,30 +1,29 @@
-# One module per paper figure/table. Each prints CSV rows and writes
-# results/bench/<name>.csv; this driver runs them all.
+# Legacy entry point — the harness moved to `python -m repro.bench.run`.
+# This shim maps the old flags onto the new runner so existing muscle
+# memory (`python benchmarks/run.py [--quick]`) keeps working.
 from __future__ import annotations
 
+import os
 import sys
-import time
+
+# Invoked by path (`python benchmarks/run.py`), sys.path[0] is this
+# directory — anchor the repo root so `benchmarks.*` stays importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
-def main() -> None:
-    from benchmarks import (bench_convergence, bench_h_sweep, bench_kernels,
-                            bench_overheads, bench_roofline, bench_scaling)
-    quick = "--quick" in sys.argv
-    stages = [
-        ("Fig3/4 overhead decomposition", bench_overheads.main),
-        ("Fig6/7 H trade-off sweep", bench_h_sweep.main),
-        ("Fig2/5 convergence vs frameworks + MLlib", bench_convergence.main),
-        ("kernel microbench", bench_kernels.main),
-        ("roofline table (from dry-run artifacts)", bench_roofline.main),
-    ]
-    if not quick:
-        stages.append(("Fig8 scaling vs workers", bench_scaling.main))
-    for name, fn in stages:
-        print(f"\n==== {name} ====")
-        t0 = time.time()
-        fn()
-        print(f"# ({time.time() - t0:.1f}s)")
+def main() -> int:
+    from repro.bench.run import main as bench_main
+    argv = sys.argv[1:]
+    # old default was the full paper-figure run; respect any explicit tier
+    tier_flags = {"--smoke", "--quick", "--full", "--tier"}
+    if not tier_flags & set(argv):
+        argv = argv + ["--full"]
+    print("# benchmarks/run.py is a shim; use `python -m repro.bench.run` "
+          "(tiers: --smoke/--quick/--full)")
+    return bench_main(argv)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

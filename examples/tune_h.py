@@ -1,21 +1,34 @@
 """The paper's conclusion, automated: an algorithm that adapts its
 communication interval to measured system conditions.
 
-Uses the golden-section autotuner over live measurements (rounds-to-eps
-from real runs + per-round time from a framework profile), then checks
-the tuned H against the exhaustive grid — for two very different
-"systems" (MPI-like and pySpark-like).
+Uses the golden-section autotuner over live measurements — rounds-to-eps
+from real runs plus a per-round time model whose solver-cost slope is
+MEASURED through the bench harness's timing discipline
+(``repro.bench.timing``, warmup/repeat/min) rather than hard-coded —
+then checks the tuned H against the exhaustive grid, for two very
+different "systems" (MPI-like and pySpark-like).
 
   PYTHONPATH=src python examples/tune_h.py
 """
 import functools
 
+from repro.bench.timing import measure_solver_time
 from repro.core import CoCoAConfig, CoCoATrainer, PROFILES
 from repro.core.tradeoff import autotune_H
 from repro.data import make_glm_data
 
 A, b, _ = make_glm_data(m=256, n=768, density=0.2, seed=4)
 EPS = 1e-3
+H_REF = 96
+
+# Measure the solver-cost slope once (seconds per local SCD step) at the
+# reference point; the model extrapolates linearly in H, which is exact
+# for this solver (H sequential coordinate steps).
+_tr = CoCoATrainer(CoCoAConfig(K=8, H=H_REF, seed=0), A, b)
+T_PER_STEP = measure_solver_time(_tr, H_REF, reps=3) / H_REF
+T_REF = T_PER_STEP * H_REF
+print(f"measured solver cost: {T_PER_STEP * 1e6:.2f} us/step "
+      f"(t_ref={T_REF * 1e3:.2f} ms at H={H_REF})")
 
 
 @functools.lru_cache(maxsize=64)
@@ -25,8 +38,7 @@ def rounds_to_eps(H: int):
 
 
 def round_time_model(profile, H):
-    t_solver = 4e-4 * H          # measured-linear solver cost model
-    return profile.round_time(t_solver, t_ref_s=4e-4 * 96)
+    return profile.round_time(T_PER_STEP * H, t_ref_s=T_REF)
 
 
 for name in ("E_mpi", "D_pyspark_c"):

@@ -1,0 +1,20 @@
+"""Unified benchmark harness (paper §5's methodology, made repeatable).
+
+The paper's contribution is careful *measurement* — decomposing T_tot and
+tuning H against it. This package makes those measurements comparable
+across commits:
+
+  * ``registry``  — decorator-registered benchmarks (like configs/registry).
+  * ``timing``    — the warmup/repeat/min measurement discipline.
+  * ``schema``    — versioned, machine-readable ``BENCH_<name>.json`` results
+    with an environment fingerprint.
+  * ``run``       — ``python -m repro.bench.run --smoke|--quick|--full``.
+  * ``compare``   — ``python -m repro.bench.compare old new --max-regression
+    1.25`` exits nonzero on regression so CI can gate.
+
+Benchmark *workloads* live in the repo-level ``benchmarks/`` directory
+(they are experiment definitions, not library code); this package is the
+machinery that runs them.
+"""
+from repro.bench.registry import BenchContext, BenchSpec, benchmark, get, names  # noqa: F401
+from repro.bench.schema import SCHEMA_VERSION, BenchResult, EnvFingerprint  # noqa: F401

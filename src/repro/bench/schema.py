@@ -1,0 +1,125 @@
+"""Versioned, machine-readable benchmark results.
+
+One ``BENCH_<name>.json`` per benchmark per run. The file is the contract
+between the runner, the compare tool, and CI artifacts — bump
+``SCHEMA_VERSION`` on any incompatible change and teach ``load`` the old
+shape if trajectories must stay comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform as _platform
+from dataclasses import dataclass, field
+from datetime import datetime, timezone
+
+SCHEMA_VERSION = 1
+
+_STATUSES = ("ok", "skipped", "timeout", "error")
+
+
+@dataclass(frozen=True)
+class EnvFingerprint:
+    """Enough environment to judge whether two results are comparable."""
+    python: str
+    jax: str
+    numpy: str
+    platform: str
+    device_kind: str
+    device_count: int
+    cpu_count: int
+    xla_flags: str = ""
+
+    @classmethod
+    def capture(cls) -> "EnvFingerprint":
+        import jax
+        import numpy as np
+        devices = jax.devices()
+        return cls(
+            python=_platform.python_version(),
+            jax=jax.__version__,
+            numpy=np.__version__,
+            platform=_platform.platform(),
+            device_kind=devices[0].device_kind if devices else "none",
+            device_count=len(devices),
+            cpu_count=os.cpu_count() or 1,
+            xla_flags=os.environ.get("XLA_FLAGS", ""),
+        )
+
+
+@dataclass
+class BenchResult:
+    benchmark: str
+    tier: str
+    env: EnvFingerprint
+    schema_version: int = SCHEMA_VERSION
+    created_utc: str = ""
+    status: str = "ok"
+    wall_s: float = 0.0                      # total harness wall time
+    params: dict = field(default_factory=dict)
+    timings_s: dict = field(default_factory=dict)   # lower-is-better gates
+    counters: dict = field(default_factory=dict)    # informational scalars
+    rows: list = field(default_factory=list)        # full per-point table
+    notes: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.created_utc:
+            self.created_utc = datetime.now(timezone.utc).isoformat(
+                timespec="seconds")
+
+    # -- serialization -------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def write(self, out_dir: str = ".") -> str:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, result_filename(self.benchmark))
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+
+def result_filename(benchmark: str) -> str:
+    return f"BENCH_{benchmark}.json"
+
+
+def validate(d: dict) -> list[str]:
+    """Schema check on a loaded dict; returns a list of problems."""
+    problems = []
+    if d.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version {d.get('schema_version')!r} "
+                        f"!= {SCHEMA_VERSION}")
+    for key, typ in (("benchmark", str), ("tier", str), ("status", str),
+                     ("params", dict), ("timings_s", dict),
+                     ("counters", dict), ("rows", list), ("notes", list),
+                     ("env", dict)):
+        if not isinstance(d.get(key), typ):
+            problems.append(f"field {key!r} missing or not {typ.__name__}")
+    if isinstance(d.get("status"), str) and d["status"] not in _STATUSES:
+        problems.append(f"status {d['status']!r} not in {_STATUSES}")
+    if isinstance(d.get("timings_s"), dict):
+        for k, v in d["timings_s"].items():
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                problems.append(f"timings_s[{k!r}] is not a number")
+    if isinstance(d.get("env"), dict):
+        env_fields = {f.name for f in dataclasses.fields(EnvFingerprint)}
+        missing = env_fields - set(d["env"])
+        if missing:
+            problems.append(f"env missing fields {sorted(missing)}")
+    return problems
+
+
+def load(path: str) -> BenchResult:
+    """Load + validate one BENCH_*.json; raises ValueError on bad schema."""
+    with open(path) as f:
+        d = json.load(f)
+    problems = validate(d)
+    if problems:
+        raise ValueError(f"{path}: invalid bench result: " + "; ".join(problems))
+    env = EnvFingerprint(**{k: d["env"][k] for k in
+                            (f.name for f in dataclasses.fields(EnvFingerprint))})
+    known = {f.name for f in dataclasses.fields(BenchResult)} - {"env"}
+    kwargs = {k: v for k, v in d.items() if k in known}
+    return BenchResult(env=env, **kwargs)

@@ -1,0 +1,64 @@
+"""The measurement discipline every benchmark shares: warmup, repeat, min.
+
+Moved here from ``core/tradeoff.py`` so the whole harness (kernel
+microbenches, solver rounds, master step) times things the same way:
+jit/compile excluded by warmup calls, dispatch noise suppressed by
+taking the best of ``reps`` repetitions, async jax work flushed with
+``block_until_ready`` inside the timed region.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TimingPolicy:
+    warmup: int = 1
+    reps: int = 3
+    reduce: str = "min"   # min | median | mean
+
+    def combine(self, samples: list[float]) -> float:
+        if self.reduce == "min":
+            return min(samples)
+        if self.reduce == "median":
+            return float(statistics.median(samples))
+        if self.reduce == "mean":
+            return float(statistics.fmean(samples))
+        raise ValueError(f"unknown reduce {self.reduce!r}")
+
+
+DEFAULT_POLICY = TimingPolicy()
+
+
+def time_callable(fn, *args, policy: TimingPolicy = DEFAULT_POLICY,
+                  **kwargs) -> float:
+    """Wall seconds per call of ``fn(*args, **kwargs)`` under ``policy``.
+    Blocks on the result so async jax dispatch is charged to the call."""
+    import jax
+
+    for _ in range(max(policy.warmup, 0)):
+        jax.block_until_ready(fn(*args, **kwargs))
+    samples = []
+    for _ in range(max(policy.reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        samples.append(time.perf_counter() - t0)
+    return policy.combine(samples)
+
+
+def measure_solver_time(trainer, H: int, reps: int = 3,
+                        warmup: int = 1) -> float:
+    """Wall time of one (jitted) local-solver round at the given H —
+    plays the role of the paper's measured T_worker per round."""
+    import jax
+
+    from repro.core.cocoa import CoCoAConfig, CoCoATrainer
+
+    cfg = CoCoAConfig(**{**trainer.cfg.__dict__, "H": H})
+    t = CoCoATrainer(cfg, trainer.A_np, trainer.b_np)
+    alpha, w = t.init_state()
+    key = jax.random.key(0)
+    return time_callable(t._round_fn, alpha, w, key,
+                         policy=TimingPolicy(warmup=warmup, reps=reps))

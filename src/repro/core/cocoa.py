@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import partition as part_mod
 from repro.core import solvers
 from repro.core.glm import GLMProblem, optimal_objective, primal_objective, suboptimality
+from repro.utils import compat
 
 
 @dataclass(frozen=True)
@@ -223,11 +224,10 @@ class CoCoATrainer:
             primal = problem.loss(w_new) + reg
             return alpha_new[None], w_new, primal
 
-        sharded = jax.shard_map(
-            shard_fn, mesh=mesh,
+        sharded = compat.shard_map(
+            shard_fn, mesh,
             in_specs=(P(axis), P(axis), P(axis), P(axis), P(None), P(None)),
-            out_specs=(P(axis), P(None), P()),
-            check_vma=False)
+            out_specs=(P(axis), P(None), P()))
 
         @functools.partial(jax.jit, donate_argnums=(0, 1))
         def round_fn(alpha_st, w, key_data):
@@ -240,9 +240,7 @@ class CoCoATrainer:
                     record_every: int = 1) -> History:
         cfg = self.cfg
         if mesh is None:
-            mesh = jax.make_mesh(
-                (cfg.K,), ("workers",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = compat.make_mesh((cfg.K,), ("workers",))
         round_fn = self.build_sharded_round(mesh)
         axis = mesh.axis_names[0]
         alpha, w = self.init_state()

@@ -12,11 +12,11 @@ training.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.bench.timing import measure_solver_time  # noqa: F401  (re-export)
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer
 from repro.core.overheads import OverheadProfile
 
@@ -36,23 +36,8 @@ class HSweep:
     points: list = field(default_factory=list)
 
 
-def measure_solver_time(trainer: CoCoATrainer, H: int, reps: int = 3) -> float:
-    """Wall time of one (jitted) local-solver round at the given H —
-    plays the role of the paper's measured T_worker per round."""
-    cfg = CoCoAConfig(**{**trainer.cfg.__dict__, "H": H})
-    t = CoCoATrainer(cfg, trainer.A_np, trainer.b_np)
-    alpha, w = t.init_state()
-    import jax
-    key = jax.random.key(0)
-    out = t._round_fn(alpha, w, key)
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        out = t._round_fn(alpha, w, key)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
+# measure_solver_time lives in repro.bench.timing (the harness's shared
+# warmup/repeat/min discipline) and is re-exported above for back-compat.
 
 
 def sweep_H(A, b, base_cfg: CoCoAConfig, H_grid, eps: float = 1e-3,

@@ -37,6 +37,8 @@ def run_pair(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # jax < 0.5 returns a one-element list
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text())
     n_dev = mesh.devices.size
     rec = {

@@ -6,14 +6,13 @@ only the dry-run is allowed to fake 512 host devices.
 """
 from __future__ import annotations
 
-import jax
+from repro.utils import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple:
@@ -23,8 +22,7 @@ def data_axes(mesh) -> tuple:
 
 def make_worker_mesh(K: int):
     """1-D mesh for the CoCoA shard_map driver."""
-    return jax.make_mesh((K,), ("workers",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((K,), ("workers",))
 
 
 # Hardware constants (TPU v5e), used by the roofline analysis.

@@ -871,13 +871,13 @@ def _moe_sharded(p, cfg: ModelConfig, x, *, no_drop: bool):
         shared_specs = {"w_gate": {"w": P(None, tp)},
                         "w_up": {"w": P(None, tp)},
                         "w_down": {"w": P(tp, None)}}
-    y, aux = jax.shard_map(
-        local_fn, mesh=mesh,
+    from repro.utils import compat
+    y, aux = compat.shard_map(
+        local_fn, mesh,
         in_specs=(P(dp, None, None), P(None, None),
                   P(tp, None, None), P(tp, None, None), P(tp, None, None),
                   shared_specs),
         out_specs=(P(dp, None, None), P(None)),
-        check_vma=False,
     )(x, p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"], shared_p)
     return y, aux[0]
 

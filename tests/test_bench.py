@@ -1,0 +1,138 @@
+"""The bench harness itself: registry, schema round-trip, compare gate,
+and a smoke-tier end-to-end run on a tiny problem."""
+import json
+
+import pytest
+
+from repro.bench import compare as cmp_mod
+from repro.bench import registry, schema
+from repro.bench.run import run_benchmarks
+from repro.bench.timing import TimingPolicy
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_registration_and_lookup():
+    @registry.benchmark("_test_dummy", figures="none")
+    def dummy(ctx):
+        """A dummy benchmark."""
+        return {"timings_s": {"x": 1.0}}
+
+    try:
+        spec = registry.get("_test_dummy")
+        assert spec.fn is dummy
+        assert spec.description == "A dummy benchmark."
+        assert "_test_dummy" in registry.names()
+        # duplicate name with a different function is rejected
+        with pytest.raises(ValueError, match="already registered"):
+            @registry.benchmark("_test_dummy")
+            def other(ctx):
+                return {}
+    finally:
+        registry._REGISTRY.pop("_test_dummy", None)
+
+
+def test_registry_loads_all_ported_benchmarks():
+    names = registry.load_default_benchmarks()
+    assert {"overheads", "h_sweep", "convergence", "kernels", "roofline",
+            "scaling", "drivers"} <= set(names)
+
+
+def test_unknown_benchmark_and_tier():
+    with pytest.raises(KeyError, match="unknown benchmark"):
+        registry.get("_no_such_bench")
+    with pytest.raises(ValueError, match="unknown tier"):
+        registry.BenchContext(tier="warp")
+
+
+# ------------------------------------------------------------------ schema
+def _result(**over):
+    kw = dict(benchmark="demo", tier="smoke",
+              env=schema.EnvFingerprint.capture(),
+              params={"m": 8}, timings_s={"t": 0.5}, counters={"r": 3},
+              rows=[{"a": 1}], notes=["n"])
+    kw.update(over)
+    return schema.BenchResult(**kw)
+
+
+def test_schema_roundtrip(tmp_path):
+    res = _result()
+    path = res.write(str(tmp_path))
+    assert path.endswith("BENCH_demo.json")
+    back = schema.load(path)
+    assert back.benchmark == "demo"
+    assert back.timings_s == {"t": 0.5}
+    assert back.env.jax == res.env.jax
+    assert back.schema_version == schema.SCHEMA_VERSION
+
+
+def test_schema_validation_rejects_junk(tmp_path):
+    res = _result()
+    d = res.to_dict()
+    d["schema_version"] = 999
+    d["timings_s"] = {"t": "fast"}
+    p = tmp_path / "BENCH_bad.json"
+    p.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="schema_version"):
+        schema.load(str(p))
+    assert any("timings_s" in s for s in schema.validate(d))
+
+
+# ----------------------------------------------------------------- compare
+def test_compare_same_passes_slowdown_fails(tmp_path):
+    old = _result(timings_s={"step": 0.1, "round": 0.02})
+    same = _result(timings_s={"step": 0.1, "round": 0.02})
+    deltas = cmp_mod.compare_results(old, same, max_regression=1.25)
+    assert not any(d.regression for d in deltas)
+    slow = _result(timings_s={"step": 0.15, "round": 0.02})  # +50%
+    deltas = cmp_mod.compare_results(old, slow, max_regression=1.25)
+    assert [d.metric for d in deltas if d.regression] == ["step"]
+    fast = _result(timings_s={"step": 0.01, "round": 0.01})  # improvement
+    assert not any(d.regression
+                   for d in cmp_mod.compare_results(old, fast, 1.25))
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    old_dir, new_dir = tmp_path / "old", tmp_path / "new"
+    _result().write(str(old_dir))
+    _result().write(str(new_dir))
+    assert cmp_mod.main([str(old_dir), str(new_dir)]) == 0
+    _result(timings_s={"t": 5.0}).write(str(new_dir))  # 10x slower
+    assert cmp_mod.main([str(old_dir), str(new_dir),
+                         "--max-regression", "1.25"]) == 1
+
+
+def test_compare_min_time_floor():
+    old = _result(timings_s={"tiny": 1e-6})
+    new = _result(timings_s={"tiny": 3e-6})  # 3x, but below the floor
+    deltas = cmp_mod.compare_results(old, new, max_regression=1.25,
+                                     min_time_s=1e-4)
+    assert not any(d.regression for d in deltas)
+
+
+# ------------------------------------------------------------------ timing
+def test_timing_policy_reduce():
+    assert TimingPolicy(reduce="min").combine([3.0, 1.0, 2.0]) == 1.0
+    assert TimingPolicy(reduce="median").combine([3.0, 1.0, 2.0]) == 2.0
+    with pytest.raises(ValueError):
+        TimingPolicy(reduce="max").combine([1.0])
+
+
+# ------------------------------------------------------- end-to-end smoke
+def test_smoke_tier_end_to_end(tmp_path):
+    """One sweep-backed benchmark + the driver/comm-scheme coverage
+    benchmark, smoke tier, in-process (1 device -> K=1 sharded mesh).
+    Checks emitted files are schema-valid and carry gateable timings."""
+    results = run_benchmarks(tier="smoke", only=["kernels", "drivers"],
+                             out_dir=str(tmp_path), verbose=False)
+    by = {r.benchmark: r for r in results}
+    assert by["kernels"].status == "ok"
+    assert by["drivers"].status == "ok"
+    for name in ("kernels", "drivers"):
+        loaded = schema.load(str(tmp_path / schema.result_filename(name)))
+        assert loaded.tier == "smoke"
+        assert loaded.timings_s, name
+        assert loaded.env.device_count >= 1
+    # drivers must cover both drivers x all three comm schemes
+    got = {(r["driver"], r["scheme"]) for r in by["drivers"].rows}
+    assert got == {(d, s) for d in ("virtual", "sharded")
+                   for s in ("persistent", "spark_faithful", "compressed")}

@@ -42,11 +42,12 @@ import numpy as np, jax, jax.random as jr
 from repro.data import make_glm_data
 from repro.core import CoCoAConfig, CoCoATrainer
 from repro.utils.hlo import parse_collectives
+from repro.utils.compat import make_mesh
 A, b, _ = make_glm_data(m=128, n=256, density=0.3, seed=1)
 texts = {}
 for scheme in ("persistent", "spark_faithful"):
     tr = CoCoATrainer(CoCoAConfig(K=8, H=32, comm_scheme=scheme), A, b)
-    mesh = jax.make_mesh((8,), ("workers",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("workers",))
     rf = tr.build_sharded_round(mesh)
     alpha, w = tr.init_state()
     low = jax.jit(lambda a, w, k: rf(a, w, k)).lower(alpha, w, jr.key_data(jr.key(0)))
@@ -64,7 +65,8 @@ import jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import layers as L
 cfg = get_config("deepseek-v3-671b").reduced()
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.utils.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 p = L.init_moe(jax.random.key(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model), jnp.float32) * 0.1
 L.set_partitioning(dp=("data",), tp="model", mesh=mesh)
@@ -85,7 +87,8 @@ def test_local_updates_H1_sgd_equals_sync_dp():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.optim import LocalUpdatesConfig, local_updates_round
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.utils.compat import make_mesh
+mesh = make_mesh((4,), ("data",))
 lr = 0.1
 def loss(w, b):
     x, y = b
@@ -107,9 +110,9 @@ def round_fn(w, Xs, Ys):
         cfg = LocalUpdatesConfig(H=1)
         w2, _, _ = local_updates_round(sgd_step, w, {}, (Xl[0], Yl[0]), cfg, "data")
         return w2
-    return jax.shard_map(body, mesh=mesh,
-        in_specs=(P("data"), P("data"), P(None)), out_specs=P(None),
-        check_vma=False)(Xs, Ys, w)
+    from repro.utils.compat import shard_map
+    return shard_map(body, mesh,
+        in_specs=(P("data"), P("data"), P(None)), out_specs=P(None))(Xs, Ys, w)
 w_lu = jax.jit(round_fn)(w0, X, Y)
 assert float(jnp.max(jnp.abs(w_lu - w_ref))) < 1e-6, (w_lu, w_ref)
 print("OK")
@@ -139,7 +142,8 @@ from repro.data import make_glm_data
 from repro.core import CoCoAConfig, CoCoATrainer
 A, b, _ = make_glm_data(m=128, n=256, density=0.3, seed=1)
 tr = CoCoATrainer(CoCoAConfig(K=8, H=32, comm_scheme="compressed"), A, b)
-mesh = jax.make_mesh((8,), ("workers",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.utils.compat import make_mesh
+mesh = make_mesh((8,), ("workers",))
 rf = tr.build_sharded_round(mesh)
 alpha, w = tr.init_state()
 txt = jax.jit(lambda a,w,k: rf(a,w,k)).lower(alpha, w, jr.key_data(jr.key(0))).compile().as_text()

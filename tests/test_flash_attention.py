@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # dev extra; CI installs it via .[dev]
 from hypothesis import given, settings, strategies as st
 
 from repro.models import layers as L

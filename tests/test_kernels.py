@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev extra; CI installs it via .[dev]
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import scd_steps_kernel, scd_steps_ref

@@ -1,5 +1,8 @@
 """Framework-overhead model + H trade-off machinery (paper §5.2-§5.5)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev extra; CI installs it via .[dev]
 from hypothesis import given, settings, strategies as st
 
 from repro.core.overheads import PROFILES, communicated_bytes_per_round

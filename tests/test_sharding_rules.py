@@ -16,7 +16,8 @@ from repro.models import build_model
 def mesh():
     # AbstractMesh: full production shape without needing 256 devices —
     # the spec functions only read mesh.shape / axis_names.
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.utils.compat import abstract_mesh
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def _params(arch):
