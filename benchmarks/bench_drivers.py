@@ -1,114 +1,214 @@
-"""Driver/comm-scheme coverage: both CoCoA execution drivers (the vmap
-virtual-worker `run` and the shard_map `run_sharded`) under all three
-communication schemes (`persistent`, `spark_faithful`, `compressed`).
+"""Driver/comm-scheme coverage: the full 3-algorithm x 3-scheme matrix
+(paper §5.3/§5.4) on the unified distributed-driver layer.
 
-The smoke tier is the CI gate: fixed seeds, tiny problem, and
-rounds-to-eps asserted within tolerance bands for every driver x scheme.
-`run_sharded` needs a multi-device mesh — `python -m repro.bench.run
---smoke` fakes one via ``--xla_force_host_platform_device_count``; when
-only one device exists (e.g. in-process tests) the sharded leg degrades
-to a K=1 mesh, which still exercises the collective code paths.
+Every algorithm (CoCoA, mini-batch SCD, mini-batch SGD) runs under every
+communication scheme (`persistent`, `spark_faithful`, `compressed`)
+through BOTH execution drivers — the vmap virtual-worker path and the
+shard_map path — with fixed seeds and rounds-to-eps asserted within
+per-algorithm tolerance bands in the smoke tier (the CI gate).
+
+For each cell the modelled `comm_bytes_per_round` is checked against the
+optimized HLO of the sharded round: the derived per-round master traffic
+(2 x K x per-worker collective operand bytes, excluding the scalar
+metric psum) must equal the model exactly, and the `compressed` scheme
+must move int8 tensors. `run_sharded` needs a multi-device mesh —
+`python -m repro.bench.run --smoke` fakes one via
+``--xla_force_host_platform_device_count``; when only one device exists
+(e.g. in-process tests) the sharded leg degrades to a K=1 mesh, which
+still exercises the collective code paths but skips the byte checks
+(XLA elides single-participant collectives).
 """
 from __future__ import annotations
 
+import re
 import time
 
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
 from repro.bench.timing import time_callable
+from repro.core.distributed import COMM_SCHEMES
 from repro.core.glm import suboptimality
 
-SCHEMES = ("persistent", "spark_faithful", "compressed")
+SCHEMES = COMM_SCHEMES
+ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
+
+# MLlib-style 1/sqrt(t) schedule needs a tier-calibrated base step.
+SGD_STEP = {"smoke": 0.1, "quick": 0.05, "full": 0.05}
+
+# Fixed-seed rounds-to-eps bands per algorithm (smoke tier: m=96, n=256,
+# K=4, seed 42 data / seed 0 trainer). Measured centers ~15 / ~32 / ~93;
+# bands leave ~3x headroom for jax-version jitter. The `compressed`
+# scheme tolerates 2x extra rounds from int8 quantization error.
+SMOKE_BANDS = {
+    "cocoa": (2, 60),
+    "minibatch_scd": (8, 120),
+    "minibatch_sgd": (25, 300),
+}
 
 
-def _run_virtual(tr, wl):
-    """(rounds_to_eps, per-round seconds, final subopt) for `run`."""
-    hist = tr.run(wl.max_rounds, record_every=1, target_eps=wl.eps)
+# mini-batch SCD's 1/sigma-damped updates shrink per-round progress
+# relative to the quantizer's absmax scale, so its int8 noise floor sits
+# near 2e-3 on the smoke problem; CoCoA and SGD converge through it
+COMPRESSED_EPS_MULT = {"cocoa": 1, "minibatch_scd": 4, "minibatch_sgd": 1}
+
+
+def _eps(algo: str, scheme: str, wl) -> float:
+    # the sqrt-decay SGD schedule cannot hit 1e-3 in smoke budgets;
+    # 10x looser still separates the schemes
+    eps = 10 * wl.eps if algo == "minibatch_sgd" else wl.eps
+    if scheme == "compressed":
+        eps *= COMPRESSED_EPS_MULT[algo]
+    return eps
+
+
+def _make_trainer(algo: str, wl, tier: str, K: int, scheme: str, seed: int):
+    from repro.core import (CoCoAConfig, CoCoATrainer, MinibatchSCD,
+                            MinibatchSGD, SGDConfig)
+
+    A, b, _ = common.problem(wl)
+    if algo == "minibatch_sgd":
+        return MinibatchSGD(
+            SGDConfig(batch_frac=1.0, step_size=SGD_STEP[tier],
+                      lam=wl.lam, K=K, seed=seed, comm_scheme=scheme), A, b)
+    cfg = CoCoAConfig(K=K, H=common.n_local(wl, K), lam=wl.lam,
+                      solver="scd_ref", comm_scheme=scheme, seed=seed)
+    cls = MinibatchSCD if algo == "minibatch_scd" else CoCoATrainer
+    return cls(cfg, A, b)
+
+
+def _run_virtual(tr, wl, eps):
+    """(rounds_to_eps, per-round seconds, final subopt) for the
+    vmap virtual-worker driver."""
     import jax
-    alpha, w = tr.init_state()
-    t = time_callable(tr._round_fn, alpha, w, jax.random.key(0))
-    return hist.rounds_to(wl.eps), t, hist.subopt[-1]
+
+    from repro.core import MinibatchSGD
+
+    if isinstance(tr, MinibatchSGD):
+        hist = tr.run_workers(wl.max_rounds, record_every=1, target_eps=eps)
+    else:
+        hist = tr.run(wl.max_rounds, record_every=1, target_eps=eps)
+    t = time_callable(tr._round_fn, *tr.init_state(), jax.random.key(0))
+    return hist.rounds_to(eps), t, hist.subopt[-1]
 
 
-def _run_sharded(tr, wl):
-    """Same, driving `build_sharded_round` manually so compile time stays
+def _run_sharded(tr, wl, eps, round_fn):
+    """Same, driving the shard_map round manually so compile time stays
     out of the per-round measurement (first round discarded)."""
     import jax
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.utils.compat import make_mesh
+    from repro.core import distributed as dist
 
-    mesh = make_mesh((tr.cfg.K,), ("workers",))
-    round_fn = tr.build_sharded_round(mesh)
+    mesh = round_fn.mesh
 
     def init():
-        alpha, w = tr.init_state()
-        alpha = jax.device_put(alpha, NamedSharding(mesh, P("workers")))
-        w = jax.device_put(w, NamedSharding(mesh, P(None)))
-        return alpha, w
+        return dist.place_state(mesh, *tr.init_state())
 
     # warmup on throwaway state so compile time never lands in a timed
     # round (the measured run may converge in a single round)
-    alpha, w = init()
-    jax.block_until_ready(
-        round_fn(alpha, w, jax.random.key_data(jax.random.key(999)))[2])
-    alpha, w = init()
+    local, shared = init()
+    jax.block_until_ready(round_fn(local, shared, jax.random.key(999), 1)[2])
+    local, shared = init()
     key = jax.random.key(tr.cfg.seed)
     times, rounds_to_eps, subopt = [], None, float("inf")
-    for t in range(wl.max_rounds):
+    for t in range(1, wl.max_rounds + 1):
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()
-        alpha, w, primal = round_fn(alpha, w, jax.random.key_data(sub))
+        local, shared, primal = round_fn(local, shared, sub, t)
         subopt = suboptimality(float(primal), tr.p_star, tr.p_zero)
         times.append(time.perf_counter() - t0)
-        if subopt <= wl.eps:
-            rounds_to_eps = t + 1
+        if subopt <= eps:
+            rounds_to_eps = t
             break
     return rounds_to_eps, min(times), subopt
 
 
-@benchmark("drivers", figures="§5.3",
-           description="run vs run_sharded under all three comm schemes")
+def _hlo_traffic(tr, round_fn):
+    """(derived bytes/round, int8 collective present) from the optimized
+    HLO of the sharded round. Derived = 2 x K x per-worker collective
+    operand bytes; the one scalar f32 metric psum (4 bytes) is excluded
+    — everything else is update/state traffic through the master."""
+    import jax
+
+    from repro.utils.hlo import parse_collectives
+
+    local, shared = tr.init_state()
+    txt = round_fn.jitted.lower(round_fn.split_keys(jax.random.key(0)),
+                                local, shared, 1).compile().as_text()
+    stats = parse_collectives(txt)
+    derived = 2 * tr.cfg.K * (stats.total_operand_bytes - 4)
+    int8 = bool(re.search(r"s8\[[0-9,]+\]\S* all-gather", txt))
+    return derived, int8
+
+
+@benchmark("drivers", figures="§5.3-5.4",
+           description="3 algorithms x 3 comm schemes, virtual + sharded")
 def run(ctx: BenchContext) -> dict:
     import jax
 
+    from repro.utils.compat import make_mesh
+
     wl = common.workload(ctx.tier)
-    nl = common.n_local(wl)
     K_sh = min(wl.K, len(jax.devices()))
+    mesh = make_mesh((K_sh,), ("workers",))
     rows, timings, counters, notes = [], {}, {}, []
-    lo, hi = wl.rounds_band
-    for scheme in SCHEMES:
-        # compressed tolerates extra rounds from int8 quantization error
-        band_hi = 2 * hi if scheme == "compressed" else hi
-        tr_v = common.trainer(wl, nl, solver="scd_ref", comm_scheme=scheme,
-                              seed=ctx.seed)
-        r_v, t_v, s_v = _run_virtual(tr_v, wl)
-        tr_s = common.trainer(wl, common.n_local(wl, K_sh), solver="scd_ref",
-                              comm_scheme=scheme, K_=K_sh, seed=ctx.seed)
-        r_s, t_s, s_s = _run_sharded(tr_s, wl)
-        for driver, r2e, t_round, sub in (("virtual", r_v, t_v, s_v),
-                                          ("sharded", r_s, t_s, s_s)):
-            rows.append({"driver": driver, "scheme": scheme,
-                         "rounds_to_eps": r2e,
-                         "t_round_s": round(t_round, 6),
-                         "final_subopt": f"{sub:.2e}"})
-            timings[f"{driver}_{scheme}_round"] = t_round
-            counters[f"rounds_to_eps_{driver}_{scheme}"] = (
-                r2e if r2e is not None else -1)
-            if ctx.tier == "smoke":
-                assert r2e is not None, (
-                    f"{driver}/{scheme} did not reach eps={wl.eps} "
-                    f"in {wl.max_rounds} rounds (final subopt {sub:.2e})")
-                assert lo <= r2e <= band_hi, (
-                    f"{driver}/{scheme} rounds_to_eps={r2e} outside the "
-                    f"calibrated band [{lo}, {band_hi}]")
-        notes.append(f"{scheme}: virtual {r_v} rounds, sharded (K={K_sh}) "
-                     f"{r_s} rounds to eps={wl.eps}")
+    for algo in ALGORITHMS:
+        lo, hi = SMOKE_BANDS[algo]
+        for scheme in SCHEMES:
+            eps = _eps(algo, scheme, wl)
+            # compressed tolerates extra rounds from int8 quantization
+            band_hi = 2 * hi if scheme == "compressed" else hi
+            tr_v = _make_trainer(algo, wl, ctx.tier, wl.K, scheme, ctx.seed)
+            r_v, t_v, s_v = _run_virtual(tr_v, wl, eps)
+            tr_s = _make_trainer(algo, wl, ctx.tier, K_sh, scheme, ctx.seed)
+            round_fn = tr_s.build_sharded_round(mesh)  # one compile per cell
+            r_s, t_s, s_s = _run_sharded(tr_s, wl, eps, round_fn)
+            modelled = tr_s.comm_bytes_per_round()
+            derived, int8 = (_hlo_traffic(tr_s, round_fn) if K_sh >= 2
+                             else (None, None))
+            for driver, r2e, t_round, sub in (("virtual", r_v, t_v, s_v),
+                                              ("sharded", r_s, t_s, s_s)):
+                cell = f"{algo}_{driver}_{scheme}"
+                rows.append({"algorithm": algo, "driver": driver,
+                             "scheme": scheme, "rounds_to_eps": r2e,
+                             "t_round_s": round(t_round, 6),
+                             "final_subopt": f"{sub:.2e}",
+                             "comm_bytes_per_round": modelled,
+                             "hlo_bytes_per_round": derived})
+                timings[f"{cell}_round"] = t_round
+                counters[f"rounds_to_eps_{cell}"] = (
+                    r2e if r2e is not None else -1)
+                # bands are calibrated at K = wl.K; a device-starved
+                # sharded leg (K_sh < wl.K) converges differently
+                if ctx.tier == "smoke" and (driver == "virtual"
+                                            or K_sh == wl.K):
+                    assert r2e is not None, (
+                        f"{cell} did not reach eps={eps} in "
+                        f"{wl.max_rounds} rounds (final subopt {sub:.2e})")
+                    assert lo <= r2e <= band_hi, (
+                        f"{cell} rounds_to_eps={r2e} outside the "
+                        f"calibrated band [{lo}, {band_hi}]")
+            counters[f"comm_bytes_per_round_{algo}_{scheme}"] = modelled
+            if derived is not None:
+                counters[f"hlo_bytes_per_round_{algo}_{scheme}"] = derived
+                assert modelled == derived, (
+                    f"{algo}/{scheme}: modelled comm_bytes_per_round "
+                    f"{modelled} != {derived} derived from the HLO "
+                    f"collectives (K={K_sh})")
+                assert int8 == (scheme == "compressed"), (
+                    f"{algo}/{scheme}: int8 collective presence {int8} "
+                    f"does not match the scheme")
+            notes.append(f"{algo}/{scheme}: virtual {r_v}, sharded "
+                         f"(K={K_sh}) {r_s} rounds to eps={eps}; "
+                         f"{modelled} modelled bytes/round"
+                         + (f" == {derived} from HLO" if derived is not None
+                            else ""))
     if K_sh < wl.K:
         notes.append(f"only {K_sh} device(s) — run via `python -m "
-                     f"repro.bench.run --smoke` to fake {wl.K} CPU devices")
+                     f"repro.bench.run --smoke` to fake {wl.K} CPU devices"
+                     + ("; HLO byte checks skipped" if K_sh < 2 else ""))
     return {"params": {"m": wl.m, "n": wl.n, "K_virtual": wl.K,
-                       "K_sharded": K_sh, "H": nl, "eps": wl.eps,
+                       "K_sharded": K_sh, "eps": wl.eps,
+                       "algorithms": list(ALGORITHMS),
                        "schemes": list(SCHEMES)},
             "timings_s": timings, "counters": counters,
             "rows": rows, "notes": notes}

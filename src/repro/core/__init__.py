@@ -1,6 +1,9 @@
 """The paper's contribution: CoCoA-style communication-efficient distributed
-GLM training, framework-overhead modelling, and the communication/computation
-trade-off machinery (the H knob)."""
+GLM training (plus the mini-batch SCD and SGD baselines on the same
+unified distributed-driver layer), framework-overhead modelling, and the
+communication/computation trade-off machinery (the H knob)."""
 from repro.core.glm import GLMProblem, primal_objective, ridge_exact, suboptimality  # noqa: F401
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer  # noqa: F401
+from repro.core.baselines import MinibatchSCD, MinibatchSGD, SGDConfig  # noqa: F401
+from repro.core.distributed import COMM_SCHEMES, CommScheme, get_scheme  # noqa: F401
 from repro.core.overheads import OverheadProfile, PROFILES  # noqa: F401

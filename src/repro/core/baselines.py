@@ -1,36 +1,103 @@
-"""Baselines the paper compares against.
+"""Baselines the paper compares against — as first-class algorithms on
+the unified distributed-driver layer (``repro.core.distributed``).
 
-* Mini-batch SCD (SDCA-style, no immediate local updates): available via
-  ``CoCoAConfig(solver="scd_fixed")`` — identical coordinate rule to
-  CoCoA's local solver but every step sees the round-start residual and
-  aggregation is damped by 1/sigma. (Paper §2/§2.1.)
+* Mini-batch SCD (SDCA-style, no immediate local updates) —
+  :class:`MinibatchSCD`: identical partitioning, drivers and comm
+  schemes to CoCoA, but every local step sees the round-start residual
+  and aggregation is damped by 1/sigma. (Paper §2/§2.1.)
 
-* Mini-batch SGD — the MLlib ``LinearRegressionWithSGD`` stand-in
-  (paper §5.4, Fig 5): row-sampled gradient steps on the primal with a
-  1/sqrt(t) step-size schedule, gradients all-reduced across workers
-  (an n-dimensional vector — note this is *more* traffic than CoCoA's
-  m-vector whenever n > m, one of the reasons CoCoA wins).
+* Mini-batch SGD — :class:`MinibatchSGD`, the MLlib
+  ``LinearRegressionWithSGD`` stand-in (paper §5.4, Fig 5): row-sampled
+  gradient steps on the primal with a 1/sqrt(t) step-size schedule.
+  ``run()`` is the legacy single-device loop; ``run_workers()`` /
+  ``run_sharded()`` are the distributed drivers with row-partitioned
+  data and an n-dimensional gradient all-reduce — note this is *more*
+  traffic than CoCoA's m-vector whenever n > m, one of the reasons
+  CoCoA wins (§5.4), and it is visible in the sharded HLO.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
-from repro.core.glm import GLMProblem, primal_objective, suboptimality
-from repro.core.cocoa import History
+from repro.core import distributed as dist
+from repro.core.glm import GLMProblem, optimal_objective, primal_objective, suboptimality
+from repro.core.cocoa import CoCoAConfig, CoCoATrainer, History
+from repro.utils import compat
+
+
+class MinibatchSCD(CoCoATrainer):
+    """First-class mini-batch SCD (the paper's §2.1 baseline).
+
+    CoCoA's partitioning, both execution drivers, and all three comm
+    schemes — with the fixed-residual local solver and 1/sigma-damped
+    aggregation. Constructing one forces ``solver="scd_fixed"`` so the
+    baseline cannot silently run CoCoA's immediate-local-update solver.
+    """
+
+    def __init__(self, cfg: CoCoAConfig, A: np.ndarray, b: np.ndarray):
+        if cfg.solver != "scd_fixed":
+            cfg = dataclasses.replace(cfg, solver="scd_fixed")
+        super().__init__(cfg, A, b)
 
 
 @dataclass(frozen=True)
 class SGDConfig:
-    batch_frac: float = 1.0     # MLlib miniBatchFraction
-    step_size: float = 1.0      # base step (gamma / sqrt(t) schedule)
+    batch_frac: float = 1.0          # MLlib miniBatchFraction
+    step_size: float = 1.0           # base step (gamma / sqrt(t) schedule)
     lam: float = 1.0
     eta: float = 1.0
     K: int = 8
     seed: int = 0
+    comm_scheme: str = "persistent"  # persistent | spark_faithful | compressed
+
+    def __post_init__(self):
+        dist.get_scheme(self.comm_scheme)  # fail loudly on typos
+
+
+class _SGDRound:
+    """Mini-batch SGD's plug into the generic round drivers: each worker
+    owns a row block, samples a local mini-batch, and contributes an
+    n-dimensional partial gradient to the all-reduce; the step-size
+    schedule and the l1 proximal step run on the aggregated gradient."""
+
+    def __init__(self, cfg: SGDConfig, problem: GLMProblem,
+                 m_local: int, batch_local: int):
+        self.cfg, self.problem = cfg, problem
+        self.m_local, self.batch_local = m_local, batch_local
+        self.scale = m_local / batch_local
+
+    def local_step(self, data_k, local_k, alpha, key, t):
+        A_k, b_k = data_k                 # (m_local, n), (m_local,)
+        rows = jax.random.choice(key, self.m_local,
+                                 shape=(self.batch_local,), replace=False)
+        A_s, b_s = A_k[rows], b_k[rows]
+        resid = A_s @ alpha - b_s
+        grad = (A_s.T @ resid) * self.scale
+        return grad, local_k
+
+    def apply_update(self, alpha, grad_total, t):
+        cfg = self.cfg
+        grad = grad_total + cfg.lam * cfg.eta * alpha
+        lr = cfg.step_size / jnp.sqrt(jnp.asarray(t, jnp.float32))
+        alpha_new = alpha - lr * grad
+        # L1 proximal step for the elastic-net case.
+        thresh = lr * cfg.lam * (1.0 - cfg.eta)
+        return jnp.sign(alpha_new) * jnp.maximum(
+            jnp.abs(alpha_new) - thresh, 0.0)
+
+    def local_metric(self, data_k, local_k, alpha_new):
+        A_k, b_k = data_k                 # zero-padded rows contribute 0
+        r = A_k @ alpha_new - b_k
+        return 0.5 * jnp.sum(r * r)
+
+    def finalize_metric(self, alpha_new, loss_sum):
+        return loss_sum + self.problem.regularizer(alpha_new)
 
 
 class MinibatchSGD:
@@ -42,9 +109,75 @@ class MinibatchSGD:
         self.b = jnp.asarray(b, jnp.float32)
         self.m, self.n = A.shape
         self.problem = GLMProblem(lam=cfg.lam, eta=cfg.eta)
+        self.scheme = dist.get_scheme(cfg.comm_scheme)
         self.batch = max(1, int(cfg.batch_frac * self.m))
         self._step = self._build_step()
+        self.m_local = -(-self.m // cfg.K)
+        self.batch_local = max(1, int(round(cfg.batch_frac * self.m_local)))
+        self._dist_state = None  # (data, algo, round_fn), built lazily
+        self._p_star_cache: float | None = None
 
+    def _distributed(self):
+        """Row partition + round drivers, built on first use: the legacy
+        single-device ``run()`` path must not pay for a second padded
+        copy of A it never touches."""
+        if self._dist_state is None:
+            cfg, m_local = self.cfg, self.m_local
+            # K zero-padded row blocks (padded rows are all-zero in A
+            # and b, so they add 0 to both the gradient and the loss)
+            A_pad = np.zeros((m_local * cfg.K, self.n), np.float32)
+            A_pad[: self.m] = np.asarray(self.A, np.float32)
+            b_pad = np.zeros((m_local * cfg.K,), np.float32)
+            b_pad[: self.m] = np.asarray(self.b, np.float32)
+            data = (jnp.asarray(A_pad.reshape(cfg.K, m_local, self.n)),
+                    jnp.asarray(b_pad.reshape(cfg.K, m_local)))
+            algo = _SGDRound(cfg, self.problem, m_local, self.batch_local)
+            round_fn = dist.build_virtual_round(algo, self.scheme, data,
+                                                K=cfg.K)
+            self._dist_state = (data, algo, round_fn)
+        return self._dist_state
+
+    @property
+    def _data(self):
+        return self._distributed()[0]
+
+    @property
+    def _algo(self):
+        return self._distributed()[1]
+
+    @property
+    def _round_fn(self):
+        return self._distributed()[2]
+
+    # ------------------------------------------------------------------
+    @property
+    def p_star(self) -> float:
+        if self._p_star_cache is None:
+            self._p_star_cache = optimal_objective(
+                self.problem, np.asarray(self.A), np.asarray(self.b))
+        return self._p_star_cache
+
+    @property
+    def p_zero(self) -> float:
+        return float(self.problem.loss(-self.b))
+
+    def init_state(self):
+        """(local, shared) for the distributed drivers: SGD keeps no
+        per-worker persistent state, so ``local`` is an empty block."""
+        local = jnp.zeros((self.cfg.K, 0), jnp.float32)
+        alpha = jnp.zeros(self.n, jnp.float32)
+        return local, alpha
+
+    def comm_bytes_per_round(self) -> int:
+        """Modelled bytes through the master per round: the n-vector
+        gradient all-reduce + parameter broadcast across K workers,
+        sized to the dtypes the collectives actually move (int8 gradient
+        + f32 scale under ``compressed``, f32 otherwise)."""
+        return self.scheme.bytes_per_round(self.n, self.cfg.K)
+
+    # ------------------------------------------------------------------
+    # legacy single-device loop (global row sampling)
+    # ------------------------------------------------------------------
     def _build_step(self):
         cfg, A, b, batch = self.cfg, self.A, self.b, self.batch
 
@@ -65,12 +198,11 @@ class MinibatchSGD:
 
         return step
 
-    def comm_bytes_per_round(self, itemsize: int = 8) -> int:
-        # gradient all-reduce (n) + parameter broadcast (n), K workers
-        return 2 * self.cfg.K * self.n * itemsize
-
-    def run(self, rounds: int, p_star: float, p_zero: float,
-            record_every: int = 10, target_eps: float | None = None) -> History:
+    def run(self, rounds: int, p_star: float | None = None,
+            p_zero: float | None = None, record_every: int = 10,
+            target_eps: float | None = None) -> History:
+        p_star = self.p_star if p_star is None else p_star
+        p_zero = self.p_zero if p_zero is None else p_zero
         alpha = jnp.zeros(self.n, jnp.float32)
         key = jax.random.key(self.cfg.seed)
         hist = History(p_star=p_star, p_zero=p_zero)
@@ -87,3 +219,55 @@ class MinibatchSGD:
                     break
         self.alpha_final = np.asarray(alpha)
         return hist
+
+    # ------------------------------------------------------------------
+    # distributed drivers (row-partitioned, per-worker sampling)
+    # ------------------------------------------------------------------
+    def _record_loop(self, round_fn, local, alpha, rounds, record_every,
+                     target_eps, p_star, p_zero) -> History:
+        key = jax.random.key(self.cfg.seed)
+        hist = History(p_star=self.p_star if p_star is None else p_star,
+                       p_zero=self.p_zero if p_zero is None else p_zero)
+        for t in range(1, rounds + 1):
+            key, sub = jax.random.split(key)
+            local, alpha, primal = round_fn(local, alpha, sub, t)
+            if t % record_every == 0 or t == rounds:
+                p = float(primal)
+                s = suboptimality(p, hist.p_star, hist.p_zero)
+                hist.rounds.append(t)
+                hist.primal.append(p)
+                hist.subopt.append(s)
+                if target_eps is not None and s <= target_eps:
+                    break
+        self.alpha_final = np.asarray(alpha)
+        return hist
+
+    def run_workers(self, rounds: int, record_every: int = 10,
+                    target_eps: float | None = None,
+                    p_star: float | None = None,
+                    p_zero: float | None = None) -> History:
+        """K virtual workers (vmap over the worker axis) — same math as
+        ``run_sharded`` with the communication mechanics elided."""
+        local, alpha = self.init_state()
+        return self._record_loop(self._round_fn, local, alpha, rounds,
+                                 record_every, target_eps, p_star, p_zero)
+
+    def build_sharded_round(self, mesh: Mesh):
+        """Distributed round via the generic shard_map driver; K must
+        equal the mesh axis size. Returns jitted
+        ``round_fn(local, alpha, key, t)``."""
+        assert mesh.devices.size == self.cfg.K, (mesh.devices.size, self.cfg.K)
+        return dist.build_sharded_round(self._algo, self.scheme, self._data,
+                                        mesh)
+
+    def run_sharded(self, rounds: int, mesh: Mesh | None = None,
+                    record_every: int = 10,
+                    target_eps: float | None = None,
+                    p_star: float | None = None,
+                    p_zero: float | None = None) -> History:
+        if mesh is None:
+            mesh = compat.make_mesh((self.cfg.K,), ("workers",))
+        round_fn = self.build_sharded_round(mesh)
+        local, alpha = dist.place_state(mesh, *self.init_state())
+        return self._record_loop(round_fn, local, alpha, rounds,
+                                 record_every, target_eps, p_star, p_zero)

@@ -1,37 +1,44 @@
 """CoCoA: communication-efficient distributed primal-dual GLM training.
 
-Two execution drivers over identical math:
+Two execution drivers over identical math, both built on the unified
+distributed-driver layer (``repro.core.distributed``):
 
   * ``CoCoATrainer.run()`` — K *virtual* workers on however many real
     devices exist (vmap over the worker axis). Used for convergence
     studies and the paper-figure benchmarks on CPU.
   * ``CoCoATrainer.run_sharded()`` — real distribution via ``shard_map``
-    over a 1-D ``workers`` mesh axis with an explicit ``psum`` of the
+    over a 1-D ``workers`` mesh axis with an explicit all-reduce of the
     m-dimensional update Delta v (the paper's AllReduce pattern, Fig 1).
 
-Communication schemes (the paper's §5.3):
+Communication schemes (the paper's §5.3 plus one beyond-paper variant;
+see ``distributed.CommScheme`` for the mechanics and byte accounting):
 
   * ``persistent``      — alpha_[k] lives on its worker across rounds
     (the paper's "persistent local memory" / (B)*, (D)* optimization;
     on TPU this is simply donated device-resident state).
-  * ``spark_faithful``  — alpha is shipped through the master every
-    round, modelled as an all-gather of the full alpha followed by each
-    worker re-slicing its own block. Mathematically the identity, but
-    the extra collective traffic is real and visible in the HLO (and is
-    charged by the overhead model in the virtual driver).
+  * ``spark_faithful``  — everything is shipped through the master every
+    round: Delta v is collected (all-gather) and summed locally, and
+    alpha is all-gathered with each worker re-slicing its own block.
+    Mathematically the identity, but the extra collective traffic is
+    real and visible in the HLO (and is charged by the overhead model).
+  * ``compressed``      — int8-quantized Delta v exchange (4x less
+    traffic than f32) through the one shared quantizer in
+    ``distributed.quantize_update``.
+
+Mini-batch SCD (the paper's §2.1 baseline) runs the same drivers with
+the fixed-residual solver — see ``repro.core.baselines.MinibatchSCD``.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
+from repro.core import distributed as dist
 from repro.core import partition as part_mod
 from repro.core import solvers
 from repro.core.glm import GLMProblem, optimal_objective, primal_objective, suboptimality
@@ -46,9 +53,17 @@ class CoCoAConfig:
     eta: float = 1.0                 # 1.0 = ridge
     sigma: float | None = None       # subproblem safety; default K ("adding")
     solver: str = "scd_ref"          # scd_ref | scd_kernel | scd_fixed
-    comm_scheme: str = "persistent"  # persistent | spark_faithful
+    comm_scheme: str = "persistent"  # persistent | spark_faithful | compressed
     partitioner: str = "balanced"    # balanced | block
     seed: int = 0
+
+    def __post_init__(self):
+        # a typo'd scheme must fail loudly, not silently fall through to
+        # persistent behavior
+        dist.get_scheme(self.comm_scheme)
+        if self.partitioner not in ("balanced", "block"):
+            raise ValueError(f"unknown partitioner {self.partitioner!r}; "
+                             f"known: ('balanced', 'block')")
 
     @property
     def sigma_val(self) -> float:
@@ -81,12 +96,56 @@ def _get_solver(name: str) -> Callable:
     raise ValueError(f"unknown local solver {name!r}")
 
 
+class _CoCoARound:
+    """CoCoA's plug into the generic round drivers: the local SCD solve,
+    the residual update ``w += sum_k Delta v_k``, and the primal metric
+    evaluated without gathering alpha (``loss(w) + psum(reg_k)``).
+
+    Mini-batch SCD rides the same adapter: with ``solver="scd_fixed"``
+    the aggregation is damped by 1/sigma (paper §2.1) — in ONE place, so
+    the virtual and sharded paths cannot disagree about it.
+    """
+
+    def __init__(self, cfg: CoCoAConfig, problem: GLMProblem,
+                 solver: Callable):
+        self.cfg, self.problem, self.solver = cfg, problem, solver
+
+    def local_step(self, data_k, alpha_k, w, key, t):
+        cfg = self.cfg
+        A_k, col_sq_k, mask_k = data_k
+        logits = jnp.where(mask_k > 0, 0.0, -jnp.inf)
+        idx = jax.random.categorical(key, logits,
+                                     shape=(cfg.H,)).astype(jnp.int32)
+        dv, alpha_new = self.solver(A_k, col_sq_k, alpha_k, w, idx,
+                                    sigma=cfg.sigma_val, lam=cfg.lam,
+                                    eta=cfg.eta)
+        if cfg.solver == "scd_fixed":
+            # damped mini-batch aggregation: scale BOTH the local alpha
+            # move and Delta v by 1/sigma so the shared-residual
+            # invariant w = A alpha - b survives the round (damping only
+            # dv silently de-synced alpha from w).
+            alpha_new = alpha_k + (alpha_new - alpha_k) / cfg.sigma_val
+            dv = dv / cfg.sigma_val
+        return dv, alpha_new
+
+    def apply_update(self, w, total_dv, t):
+        return w + total_dv
+
+    def local_metric(self, data_k, alpha_k, w_new):
+        _, _, mask_k = data_k
+        return self.problem.regularizer(alpha_k * mask_k)
+
+    def finalize_metric(self, w_new, reg_sum):
+        return self.problem.loss(w_new) + reg_sum
+
+
 class CoCoATrainer:
     """Owns the partitioned data and the jitted round functions."""
 
     def __init__(self, cfg: CoCoAConfig, A: np.ndarray, b: np.ndarray):
         self.cfg = cfg
         self.problem = GLMProblem(lam=cfg.lam, eta=cfg.eta)
+        self.scheme = dist.get_scheme(cfg.comm_scheme)
         self.A_np, self.b_np = np.asarray(A, np.float32), np.asarray(b, np.float32)
         m, n = A.shape
         self.m, self.n = m, n
@@ -101,51 +160,12 @@ class CoCoATrainer:
         self.col_sq = jnp.sum(self.A_st ** 2, axis=1)       # (K, n_pad)
         self.b = jnp.asarray(self.b_np)
         self._solver = _get_solver(cfg.solver)
-        self._round_fn = self._build_round()
+        self._algo = _CoCoARound(cfg, self.problem, self._solver)
+        self._data = (self.A_st, self.col_sq, self.mask)
+        self._round_fn = dist.build_virtual_round(
+            self._algo, self.scheme, self._data, K=cfg.K,
+            use_map=(cfg.solver == "scd_kernel"))  # pallas interpret: no vmap
         self._p_star_cache: float | None = None
-
-    # ------------------------------------------------------------------
-    # virtual-worker (vmap) driver
-    # ------------------------------------------------------------------
-    def _build_round(self):
-        cfg, problem = self.cfg, self.problem
-        sigma = cfg.sigma_val
-        solver = self._solver
-        use_map = cfg.solver == "scd_kernel"  # pallas interpret: avoid vmap
-
-        def worker(A_k, col_sq_k, mask_k, alpha_k, key, w):
-            logits = jnp.where(mask_k > 0, 0.0, -jnp.inf)
-            idx = jax.random.categorical(key, logits, shape=(cfg.H,)).astype(jnp.int32)
-            if cfg.solver == "scd_fixed":
-                dv, alpha_new = solver(A_k, col_sq_k, alpha_k, w, idx,
-                                       sigma=sigma, lam=cfg.lam, eta=cfg.eta)
-                dv = dv / sigma  # damped aggregation for the mini-batch baseline
-            else:
-                dv, alpha_new = solver(A_k, col_sq_k, alpha_k, w, idx,
-                                       sigma=sigma, lam=cfg.lam, eta=cfg.eta)
-            return dv, alpha_new
-
-        @jax.jit
-        def round_fn(alpha_st, w, key):
-            keys = jax.random.split(key, cfg.K)
-            if use_map:
-                dv, alpha_new = lax.map(
-                    lambda args: worker(*args, w),
-                    (self.A_st, self.col_sq, self.mask, alpha_st, keys))
-            else:
-                dv, alpha_new = jax.vmap(worker, in_axes=(0, 0, 0, 0, 0, None))(
-                    self.A_st, self.col_sq, self.mask, alpha_st, keys, w)
-            if cfg.comm_scheme == "compressed":
-                # int8 quantization of each worker's update (see shard_fn)
-                scale = jnp.max(jnp.abs(dv), axis=1) / 127.0 + 1e-30
-                q = jnp.clip(jnp.round(dv / scale[:, None]), -127, 127)
-                dv = jnp.round(q) * scale[:, None]
-            w_new = w + jnp.sum(dv, axis=0)
-            reg = problem.regularizer(alpha_new * self.mask)
-            primal = problem.loss(w_new) + reg
-            return alpha_new, w_new, primal
-
-        return round_fn
 
     @property
     def p_star(self) -> float:
@@ -162,6 +182,18 @@ class CoCoATrainer:
         w = -self.b  # w = A @ 0 - b
         return alpha, w
 
+    def comm_bytes_per_round(self) -> int:
+        """Modelled bytes through the master per round under the
+        configured scheme — sized to the tensors the sharded collectives
+        actually move (int8 Delta v + f32 scale for ``compressed``, f32
+        otherwise; the alpha round-trip counts the padded blocks)."""
+        return self.scheme.bytes_per_round(
+            self.m, self.cfg.K,
+            local_state_len=self.cfg.K * self.part.n_padded)
+
+    # ------------------------------------------------------------------
+    # virtual-worker (vmap) driver
+    # ------------------------------------------------------------------
     def run(self, rounds: int, record_every: int = 1,
             target_eps: float | None = None) -> History:
         alpha, w = self.init_state()
@@ -169,7 +201,7 @@ class CoCoATrainer:
         hist = History(p_star=self.p_star, p_zero=self.p_zero)
         for t in range(rounds):
             key, sub = jax.random.split(key)
-            alpha, w, primal = self._round_fn(alpha, w, sub)
+            alpha, w, primal = self._round_fn(alpha, w, sub, t + 1)
             if (t + 1) % record_every == 0 or t == rounds - 1:
                 p = float(primal)
                 s = suboptimality(p, hist.p_star, hist.p_zero)
@@ -185,77 +217,34 @@ class CoCoATrainer:
     # shard_map driver (real distribution over devices)
     # ------------------------------------------------------------------
     def build_sharded_round(self, mesh: Mesh):
-        """Distributed round via shard_map; K must equal mesh axis size."""
-        cfg, problem = self.cfg, self.problem
-        sigma = cfg.sigma_val
-        solver = self._solver
-        axis = mesh.axis_names[0]
-        assert mesh.devices.size == cfg.K, (mesh.devices.size, cfg.K)
-
-        def shard_fn(A_k, col_sq_k, mask_k, alpha_k, key_k, w):
-            A_k, col_sq_k, mask_k, alpha_k = (x[0] for x in
-                                              (A_k, col_sq_k, mask_k, alpha_k))
-            key = jax.random.key_data(jax.random.fold_in(
-                jax.random.wrap_key_data(key_k[0]), lax.axis_index(axis)))
-            logits = jnp.where(mask_k > 0, 0.0, -jnp.inf)
-            idx = jax.random.categorical(jax.random.wrap_key_data(key), logits,
-                                         shape=(cfg.H,)).astype(jnp.int32)
-            dv, alpha_new = solver(A_k, col_sq_k, alpha_k, w, idx,
-                                   sigma=sigma, lam=cfg.lam, eta=cfg.eta)
-            if cfg.comm_scheme == "compressed":
-                # beyond-paper: int8-quantized Delta v exchange (4x less
-                # traffic than f32). Per-worker absmax scale travels as a
-                # tiny f32 alongside; dequant + sum happens locally.
-                scale = jnp.max(jnp.abs(dv)) / 127.0 + 1e-30
-                q = jnp.clip(jnp.round(dv / scale), -127, 127).astype(jnp.int8)
-                qs = lax.all_gather(q, axis)           # (K, m) int8
-                ss = lax.all_gather(scale, axis)       # (K,)  f32
-                w_new = w + jnp.sum(qs.astype(jnp.float32)
-                                    * ss[:, None], axis=0)
-            else:
-                w_new = w + lax.psum(dv, axis)
-            if cfg.comm_scheme == "spark_faithful":
-                # alpha shipped through the master every round: all-gather
-                # then re-slice own block — identity, but real traffic.
-                gathered = lax.all_gather(alpha_new, axis)          # (K, n_pad)
-                alpha_new = lax.dynamic_index_in_dim(
-                    gathered, lax.axis_index(axis), 0, keepdims=False)
-            reg = lax.psum(problem.regularizer(alpha_new * mask_k), axis)
-            primal = problem.loss(w_new) + reg
-            return alpha_new[None], w_new, primal
-
-        sharded = compat.shard_map(
-            shard_fn, mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(axis), P(None), P(None)),
-            out_specs=(P(axis), P(None), P()))
-
-        @functools.partial(jax.jit, donate_argnums=(0, 1))
-        def round_fn(alpha_st, w, key_data):
-            return sharded(self.A_st, self.col_sq, self.mask, alpha_st,
-                           key_data[None], w)
-
-        return round_fn
+        """Distributed round via the generic shard_map driver; K must
+        equal the mesh axis size. Returns jitted
+        ``round_fn(alpha_st, w, key, t)``."""
+        assert mesh.devices.size == self.cfg.K, (mesh.devices.size, self.cfg.K)
+        return dist.build_sharded_round(self._algo, self.scheme, self._data,
+                                        mesh)
 
     def run_sharded(self, rounds: int, mesh: Mesh | None = None,
-                    record_every: int = 1) -> History:
+                    record_every: int = 1,
+                    target_eps: float | None = None) -> History:
         cfg = self.cfg
         if mesh is None:
             mesh = compat.make_mesh((cfg.K,), ("workers",))
         round_fn = self.build_sharded_round(mesh)
-        axis = mesh.axis_names[0]
-        alpha, w = self.init_state()
-        alpha = jax.device_put(alpha, NamedSharding(mesh, P(axis)))
-        w = jax.device_put(w, NamedSharding(mesh, P(None)))
+        alpha, w = dist.place_state(mesh, *self.init_state())
         key = jax.random.key(cfg.seed)
         hist = History(p_star=self.p_star, p_zero=self.p_zero)
         for t in range(rounds):
             key, sub = jax.random.split(key)
-            alpha, w, primal = round_fn(alpha, w, jax.random.key_data(sub))
+            alpha, w, primal = round_fn(alpha, w, sub, t + 1)
             if (t + 1) % record_every == 0 or t == rounds - 1:
                 p = float(primal)
+                s = suboptimality(p, hist.p_star, hist.p_zero)
                 hist.rounds.append(t + 1)
                 hist.primal.append(p)
-                hist.subopt.append(suboptimality(p, hist.p_star, hist.p_zero))
+                hist.subopt.append(s)
+                if target_eps is not None and s <= target_eps:
+                    break
         self.alpha_final = part_mod.unpack_alpha(np.asarray(alpha), self.part, self.n)
         return hist
 

@@ -1,0 +1,293 @@
+"""Unified distributed-driver layer: one communication substrate for all
+three algorithms (paper §5.3/§5.4).
+
+The paper's headline result comes from applying the *same* framework and
+algorithmic optimizations to three distributed linear ML algorithms —
+CoCoA, mini-batch SCD, and mini-batch SGD. That comparison is only
+meaningful when every algorithm runs under the same communication
+substrate, so this module factors it out:
+
+  * :class:`CommScheme` — the three communication schemes
+
+      - ``persistent``      per-worker state lives on its worker across
+        rounds (the paper's "persistent local memory" / (B)*, (D)*
+        optimization); the aggregate travels via an in-place ``psum``.
+      - ``spark_faithful``  everything is shipped through the master
+        every round: updates are collected (all-gather) and summed
+        locally instead of psum'd, and per-worker persistent state is
+        all-gathered and re-sliced — mathematically the identity, but
+        the extra collective traffic is real and visible in the HLO.
+      - ``compressed``      beyond-paper: int8-quantized updates (4x
+        less traffic than f32) with a per-worker absmax scale travelling
+        as a tiny f32 alongside; dequant + sum happens locally.
+
+    with the ONE shared quantize/dequantize pair (both execution drivers
+    call it, so they cannot drift) and byte accounting sized to what the
+    collectives actually move (int8 for ``compressed``, f32 otherwise).
+
+  * generic round drivers over the ``workers`` mesh axis — a *virtual*
+    driver (vmap/lax.map over stacked ``(K, ...)`` worker arrays on
+    however many real devices exist) and a *sharded* driver (real
+    distribution via ``shard_map`` with explicit collectives). An
+    algorithm plugs in via the :class:`RoundAlgorithm` protocol; the
+    same object drives both paths, so the math can only differ in
+    communication mechanics.
+
+Per-worker RNG is derived identically in both drivers (``split`` of the
+round key into K worker keys), so a virtual and a sharded run with the
+same seed follow the same trajectory up to reduction-order float jitter.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import compat
+
+COMM_SCHEMES = ("persistent", "spark_faithful", "compressed")
+
+FP_ITEMSIZE = 4        # every dense array in the system is float32
+INT8_ITEMSIZE = 1
+QUANT_SCALE_BYTES = 4  # one f32 absmax scale per worker per round
+
+
+# ---------------------------------------------------------------------------
+# shared int8 quantization — the single source of truth for BOTH drivers
+# ---------------------------------------------------------------------------
+def quantize_update(dv: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Absmax int8 quantization of one worker's update vector.
+
+    Returns ``(q, scale)`` with ``q`` int8 in [-127, 127] and ``scale``
+    a scalar f32 such that ``dequantize_update(q, scale) ~= dv``.
+    """
+    scale = jnp.max(jnp.abs(dv)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(dv / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_update(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# communication schemes
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CommScheme:
+    """One of the paper's communication schemes (§5.3) + the compressed
+    beyond-paper variant. Carries both the collective mechanics (used
+    inside the round drivers) and the byte accounting for the overhead
+    model, so modelled traffic cannot drift from what is actually moved.
+    """
+    name: str
+
+    def __post_init__(self):
+        if self.name not in COMM_SCHEMES:
+            raise ValueError(f"unknown comm scheme {self.name!r}; "
+                             f"known: {COMM_SCHEMES}")
+
+    @property
+    def persistent_local_state(self) -> bool:
+        """May per-worker state (e.g. alpha_[k]) stay device-resident?"""
+        return self.name != "spark_faithful"
+
+    @property
+    def update_itemsize(self) -> int:
+        return INT8_ITEMSIZE if self.name == "compressed" else FP_ITEMSIZE
+
+    # -- aggregation inside shard_map (per-shard view) ---------------------
+    def all_reduce(self, update: jax.Array, axis: str) -> jax.Array:
+        """Sum the per-worker 1-D update across the mesh axis."""
+        if self.name == "compressed":
+            q, scale = quantize_update(update)
+            qs = lax.all_gather(q, axis)            # (K, L) int8
+            ss = lax.all_gather(scale, axis)        # (K,)  f32
+            return jnp.sum(dequantize_update(qs, ss[:, None]), axis=0)
+        if self.name == "spark_faithful":
+            # collected at the master and re-broadcast, not reduced
+            # in-place — identity, but the traffic is real.
+            return jnp.sum(lax.all_gather(update, axis), axis=0)
+        return lax.psum(update, axis)
+
+    # -- aggregation over stacked (K, L) updates (virtual driver) ----------
+    def all_reduce_stacked(self, updates: jax.Array) -> jax.Array:
+        if self.name == "compressed":
+            q, scale = jax.vmap(quantize_update)(updates)
+            return jnp.sum(dequantize_update(q, scale[:, None]), axis=0)
+        return jnp.sum(updates, axis=0)
+
+    # -- persistent-state round trip (sharded driver only) -----------------
+    def roundtrip_local_state(self, state: jax.Array, axis: str) -> jax.Array:
+        """``spark_faithful`` ships per-worker persistent state through
+        the master every round: all-gather, then each worker re-slices
+        its own block — the identity, with real collective traffic."""
+        if self.persistent_local_state or state.size == 0:
+            return state
+        gathered = lax.all_gather(state, axis)      # (K, L_local)
+        return lax.dynamic_index_in_dim(gathered, lax.axis_index(axis), 0,
+                                        keepdims=False)
+
+    # -- modelled traffic --------------------------------------------------
+    def bytes_per_round(self, update_len: int, K: int,
+                        local_state_len: int = 0) -> int:
+        """Bytes through the master per round (paper Fig 1 + §5.3),
+        sized to the dtypes the collectives actually move.
+
+        Always: K workers send their ``update_len``-vector up and
+        receive the aggregate back (f32, or int8 + a 4-byte f32 scale
+        under ``compressed``). ``spark_faithful`` additionally ships the
+        ``local_state_len`` total elements of per-worker persistent
+        state up and down in f32.
+        """
+        if self.name == "compressed":
+            v = 2 * K * (update_len * INT8_ITEMSIZE + QUANT_SCALE_BYTES)
+        else:
+            v = 2 * K * update_len * FP_ITEMSIZE
+        a = (0 if self.persistent_local_state
+             else 2 * local_state_len * FP_ITEMSIZE)
+        return v + a
+
+
+def get_scheme(name: str) -> CommScheme:
+    """Validated scheme lookup (raises on typos instead of silently
+    falling through to persistent behavior)."""
+    return CommScheme(name)
+
+
+# ---------------------------------------------------------------------------
+# the algorithm protocol
+# ---------------------------------------------------------------------------
+class RoundAlgorithm(Protocol):
+    """What one algorithm plugs into the generic round drivers.
+
+    ``data``   tuple of ``(K, ...)`` stacked arrays, partitioned on the
+               leading worker axis (column blocks for CoCoA/SCD, row
+               blocks for SGD).
+    ``local``  ``(K, L_local)`` per-worker persistent state (alpha
+               blocks; empty ``(K, 0)`` when the algorithm has none).
+    ``shared`` replicated state (the residual ``w`` / the model
+               ``alpha``).
+    """
+
+    def local_step(self, data_k, local_k, shared, key, t):
+        """One worker's round: returns ``(update, local_new)`` where
+        ``update`` is the 1-D vector to be all-reduced."""
+        ...
+
+    def apply_update(self, shared, total_update, t):
+        """New shared state from the all-reduced update (round ``t``)."""
+        ...
+
+    def local_metric(self, data_k, local_k, shared_new):
+        """Per-worker scalar metric contribution (summed across workers)."""
+        ...
+
+    def finalize_metric(self, shared_new, metric_sum):
+        """Round metric (e.g. the primal objective) from the summed
+        per-worker contributions."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# generic round drivers
+# ---------------------------------------------------------------------------
+def build_virtual_round(algo: RoundAlgorithm, scheme: CommScheme, data,
+                        *, K: int, use_map: bool = False) -> Callable:
+    """K *virtual* workers on however many real devices exist.
+
+    Returns jitted ``round_fn(local, shared, key, t) -> (local_new,
+    shared_new, metric)``. ``use_map`` runs workers with ``lax.map``
+    instead of ``vmap`` (needed for interpret-mode Pallas solvers).
+    """
+
+    @jax.jit
+    def round_fn(local, shared, key, t=1):
+        keys = jax.random.split(key, K)
+        if use_map:
+            upd, local_new = lax.map(
+                lambda args: algo.local_step(args[0], args[1], shared,
+                                             args[2], t),
+                (data, local, keys))
+        else:
+            upd, local_new = jax.vmap(
+                lambda d, l, k: algo.local_step(d, l, shared, k, t))(
+                    data, local, keys)
+        total = scheme.all_reduce_stacked(upd)
+        shared_new = algo.apply_update(shared, total, t)
+        metric_sum = jnp.sum(jax.vmap(
+            lambda d, l: algo.local_metric(d, l, shared_new))(data, local_new))
+        return local_new, shared_new, algo.finalize_metric(shared_new,
+                                                           metric_sum)
+
+    return round_fn
+
+
+def build_sharded_round(algo: RoundAlgorithm, scheme: CommScheme, data,
+                        mesh: Mesh, *, donate: bool = True) -> Callable:
+    """Real distribution via ``shard_map`` over the mesh's single axis.
+
+    Returns jitted ``round_fn(local, shared, key, t) -> (local_new,
+    shared_new, metric)`` with ``local``/``shared`` donated. The mesh
+    axis size must equal the worker count K (the leading dim of every
+    ``data`` leaf and of ``local``).
+    """
+    axis = mesh.axis_names[0]
+    K = mesh.devices.size
+    for leaf in jax.tree_util.tree_leaves(data):
+        assert leaf.shape[0] == K, (leaf.shape, K)
+
+    def shard_fn(data_sh, local_sh, keys_sh, shared, t):
+        data_k = jax.tree_util.tree_map(lambda x: x[0], data_sh)
+        local_k = local_sh[0]
+        key_k = jax.random.wrap_key_data(keys_sh[0])
+        upd, local_new = algo.local_step(data_k, local_k, shared, key_k, t)
+        total = scheme.all_reduce(upd, axis)
+        shared_new = algo.apply_update(shared, total, t)
+        local_new = scheme.roundtrip_local_state(local_new, axis)
+        metric_sum = lax.psum(algo.local_metric(data_k, local_new,
+                                                shared_new), axis)
+        metric = algo.finalize_metric(shared_new, metric_sum)
+        return local_new[None], shared_new, metric
+
+    data_specs = jax.tree_util.tree_map(lambda _: P(axis), data)
+    sharded = compat.shard_map(
+        shard_fn, mesh,
+        in_specs=(data_specs, P(axis), P(axis), P(None), P()),
+        out_specs=(P(axis), P(None), P()))
+
+    @functools.partial(jax.jit, donate_argnums=(1, 2) if donate else ())
+    def jitted(keys, local, shared, t):
+        return sharded(data, local, keys, shared, t)
+
+    def split_keys(key):
+        # same per-worker key derivation as the virtual driver, so the
+        # two paths follow the same trajectory; computed OUTSIDE the
+        # jitted round so XLA does not partition the threefry split into
+        # spurious u32 collectives (which would pollute the HLO traffic
+        # the byte accounting is checked against)
+        return jax.random.key_data(jax.random.split(key, K))
+
+    def round_fn(local, shared, key, t=1):
+        return jitted(split_keys(key), local, shared, t)
+
+    # the jitted inner + key derivation, exposed for AOT lowering (HLO
+    # collective-traffic inspection in benches/tests) and state placement
+    round_fn.jitted = jitted
+    round_fn.split_keys = split_keys
+    round_fn.mesh = mesh
+    return round_fn
+
+
+def place_state(mesh: Mesh, local, shared, axis: str | None = None):
+    """Device-put ``(local, shared)`` for the sharded driver: ``local``
+    partitioned over the worker axis, ``shared`` replicated."""
+    axis = axis or mesh.axis_names[0]
+    local = jax.device_put(local, NamedSharding(mesh, P(axis)))
+    shared = jax.device_put(shared, NamedSharding(mesh, P(None)))
+    return local, shared

@@ -74,12 +74,33 @@ PROFILES: dict[str, OverheadProfile] = {
 
 def communicated_bytes_per_round(m: int, n: int, K: int,
                                  persistent_alpha: bool,
-                                 itemsize: int = 8) -> int:
+                                 itemsize: int = 4,
+                                 scheme: str | None = None) -> int:
     """Bytes through the master per round (paper Fig 1 + §5.3).
 
     Always: K workers send the m-vector Delta v up, receive v back.
     Non-persistent schemes additionally ship the full alpha up and down.
+    Every dense array in the system is float32, hence ``itemsize=4``.
+
+    ``scheme`` (``persistent | spark_faithful | compressed``) switches to
+    the :class:`repro.core.distributed.CommScheme` accounting, which also
+    covers the int8 ``compressed`` exchange (m bytes + a 4-byte f32
+    scale per worker, each way) and overrides ``persistent_alpha`` /
+    ``itemsize``. The alpha round-trip then counts K zero-padded
+    ``ceil(n/K)`` blocks — the even/block-partition layout (the analytic
+    path below keeps the paper's unpadded ``n``). For a concrete trainer
+    prefer ``CoCoATrainer.comm_bytes_per_round()``: the balanced
+    partitioner may pad blocks beyond ``ceil(n/K)`` under skewed nnz,
+    and only the trainer knows the actual padded size the collectives
+    move (what the ``drivers`` benchmark asserts against the HLO).
     """
+    if scheme is not None:
+        # local import keeps this module import-light (no jax) for the
+        # pure model-calibration path
+        from repro.core.distributed import get_scheme
+        n_moved = -(n // -K) * K  # K padded blocks of ceil(n/K)
+        return get_scheme(scheme).bytes_per_round(m, K,
+                                                  local_state_len=n_moved)
     v_traffic = 2 * K * m * itemsize
     a_traffic = 0 if persistent_alpha else 2 * n * itemsize
     return v_traffic + a_traffic

@@ -8,7 +8,12 @@ per-round overhead, which is why the paper finds optimal H differing by
 
 This module provides the sweep + autotuner used by the benchmarks and by
 ``optim/local_updates.py``'s roofline-driven variant for transformer
-training.
+training. Sweeps ride the unified distributed-driver layer
+(``repro.core.distributed``): ``base_cfg.comm_scheme`` threads through
+every grid point. Per-round traffic under a scheme is available via
+``CoCoATrainer.comm_bytes_per_round()`` / the scheme-aware
+``overheads.communicated_bytes_per_round``; charging it as wall-clock
+in the autotuner's time model is still future work (see ROADMAP).
 """
 from __future__ import annotations
 

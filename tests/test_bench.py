@@ -132,7 +132,14 @@ def test_smoke_tier_end_to_end(tmp_path):
         assert loaded.tier == "smoke"
         assert loaded.timings_s, name
         assert loaded.env.device_count >= 1
-    # drivers must cover both drivers x all three comm schemes
-    got = {(r["driver"], r["scheme"]) for r in by["drivers"].rows}
-    assert got == {(d, s) for d in ("virtual", "sharded")
+    # drivers must cover the full matrix: 3 algorithms x both execution
+    # drivers x all three comm schemes
+    got = {(r["algorithm"], r["driver"], r["scheme"])
+           for r in by["drivers"].rows}
+    assert got == {(a, d, s)
+                   for a in ("cocoa", "minibatch_scd", "minibatch_sgd")
+                   for d in ("virtual", "sharded")
                    for s in ("persistent", "spark_faithful", "compressed")}
+    # every cell reports modelled bytes sized to the scheme's dtypes
+    for r in by["drivers"].rows:
+        assert r["comm_bytes_per_round"] > 0

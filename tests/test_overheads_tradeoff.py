@@ -41,10 +41,30 @@ def test_round_time_and_compute_fraction():
 
 def test_communicated_bytes_persistent_vs_not():
     m, n, K = 1000, 100000, 8
+    # every array in the system is float32: itemsize defaults to 4
     with_alpha = communicated_bytes_per_round(m, n, K, persistent_alpha=False)
     without = communicated_bytes_per_round(m, n, K, persistent_alpha=True)
-    assert with_alpha - without == 2 * n * 8
-    assert without == 2 * K * m * 8
+    assert with_alpha - without == 2 * n * 4
+    assert without == 2 * K * m * 4
+
+
+def test_communicated_bytes_by_scheme():
+    """The scheme-aware accounting matches the CommScheme dtypes: int8
+    Delta v + 4-byte f32 scale per worker for `compressed`."""
+    m, n, K = 1000, 100000, 8
+    assert (communicated_bytes_per_round(m, n, K, True, scheme="persistent")
+            == 2 * K * m * 4)
+    assert (communicated_bytes_per_round(m, n, K, True, scheme="spark_faithful")
+            == 2 * K * m * 4 + 2 * n * 4)
+    assert (communicated_bytes_per_round(m, n, K, True, scheme="compressed")
+            == 2 * K * (m + 4))
+    # when K does not divide n, the scheme path counts the K zero-padded
+    # ceil(n/K) blocks the collectives actually move
+    assert (communicated_bytes_per_round(m, n + 1, K, True,
+                                         scheme="spark_faithful")
+            == 2 * K * m * 4 + 2 * ((n + 1 + K - 1) // K) * K * 4)
+    with pytest.raises(ValueError, match="unknown comm scheme"):
+        communicated_bytes_per_round(m, n, K, True, scheme="quantised")
 
 
 def _toy_sweep():
