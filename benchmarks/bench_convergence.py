@@ -11,9 +11,10 @@ import numpy as np
 
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
+from repro.bench.timing import measure_solver_time
 from repro.core import PROFILES
 from repro.core.baselines import MinibatchSGD, SGDConfig
-from repro.core.tradeoff import optimal_H, time_to_eps
+from repro.core.tradeoff import NoConvergedPointError, optimal_H, time_to_eps
 
 IMPLS = ("A_spark", "B_spark_c", "C_pyspark", "D_pyspark_c",
          "B_spark_opt", "D_pyspark_opt", "E_mpi")
@@ -27,11 +28,16 @@ SGD_GRID = ((0.1, 3e-4), (0.5, 3e-4), (1.0, 1e-3), (1.0, 3e-3))
 def run(ctx: BenchContext) -> dict:
     wl = common.workload(ctx.tier)
     sweep = common.run_sweep(wl)
-    rows, timings, counters = [], {}, {}
+    rows, timings, counters, notes = [], {}, {}, []
     t_opts = {}
     for name in IMPLS:
         p = PROFILES[name]
-        h_opt, t_opt = optimal_H(p, sweep)
+        try:
+            h_opt, t_opt = optimal_H(p, sweep)
+        except NoConvergedPointError as e:
+            rows.append({"impl": name, "H_opt": "-", "time_to_eps_s": "-"})
+            notes.append(f"{name}: optimum skipped — {e}")
+            continue
         t_opts[name] = t_opt
         rows.append({"impl": name, "H_opt": h_opt,
                      "time_to_eps_s": round(t_opt, 4)})
@@ -39,8 +45,11 @@ def run(ctx: BenchContext) -> dict:
     by = {r["impl"]: r for r in rows}
     # ratios from the raw optima — the rounded display values can
     # quantize to 0.0 at smoke-tier microsecond scales
-    t_mpi = t_opts["E_mpi"]
+    t_mpi = t_opts.get("E_mpi", float("nan"))
     for r in rows:
+        if r["impl"] not in t_opts or "E_mpi" not in t_opts:
+            r["gap_vs_mpi"] = "-"
+            continue
         r["gap_vs_mpi"] = round(t_opts[r["impl"]] / t_mpi, 2)
         counters[f"gap_vs_mpi_{r['impl']}"] = r["gap_vs_mpi"]
 
@@ -58,22 +67,29 @@ def run(ctx: BenchContext) -> dict:
         r2e = hist.rounds_to(wl.eps)
         if r2e is not None:
             # charge SGD the pySpark profile (it's the MLlib solver) with
-            # its n-dim gradient communication per round
+            # ITS OWN measured per-round gradient time (the serial K
+            # virtual workers are divided by K like every sweep point) —
+            # a hardcoded 5 ms stand-in overcharged fast tiers and
+            # undercharged slow ones identically for every batch_frac
+            t_sgd = measure_solver_time(sgd, sgd.cfg.H,
+                                        reps=wl.reps) / wl.K
             p = PROFILES["C_pyspark"]
-            t = r2e * p.round_time(0.005, sweep.t_ref_s)
+            t = r2e * p.round_time(t_sgd, sweep.t_ref_s)
             best_sgd = min(best_sgd, t)
     rows.append({"impl": "MLlib_SGD(pyspark)",
                  "H_opt": "-",
                  "time_to_eps_s": (round(best_sgd, 2)
                                    if np.isfinite(best_sgd) else "inf"),
                  "gap_vs_mpi": (round(best_sgd / t_mpi, 1)
-                                if np.isfinite(best_sgd) else "inf")})
+                                if np.isfinite(best_sgd) and
+                                np.isfinite(t_mpi) else "inf")})
     if np.isfinite(best_sgd):
         timings["time_to_eps_MLlib_SGD"] = float(best_sgd)
-    notes = [f"paper headline: (A) vs MPI ~10x -> ours "
-             f"{by['A_spark']['gap_vs_mpi']}x; optimized (B)*/(D)* < 2x -> "
-             f"ours {by['B_spark_opt']['gap_vs_mpi']}x / "
-             f"{by['D_pyspark_opt']['gap_vs_mpi']}x"]
+    notes.append(
+        f"paper headline: (A) vs MPI ~10x -> ours "
+        f"{by['A_spark']['gap_vs_mpi']}x; optimized (B)*/(D)* < 2x -> "
+        f"ours {by['B_spark_opt']['gap_vs_mpi']}x / "
+        f"{by['D_pyspark_opt']['gap_vs_mpi']}x")
     return {"params": {"m": wl.m, "n": wl.n, "K": wl.K, "eps": wl.eps,
                        "sgd_rounds": wl.sgd_rounds},
             "timings_s": timings, "counters": counters,

@@ -1,16 +1,20 @@
-"""Driver/comm-scheme coverage: the full 3-algorithm x 3-scheme matrix
+"""Driver/comm-scheme coverage: the full 3-algorithm x 4-scheme matrix
 (paper §5.3/§5.4) on the unified distributed-driver layer.
 
 Every algorithm (CoCoA, mini-batch SCD, mini-batch SGD) runs under every
-communication scheme (`persistent`, `spark_faithful`, `compressed`)
-through BOTH execution drivers — the vmap virtual-worker path and the
-shard_map path — with fixed seeds and rounds-to-eps asserted within
-per-algorithm tolerance bands in the smoke tier (the CI gate).
+communication scheme (`persistent`, `spark_faithful`, `compressed`,
+`reduce_scatter`) through BOTH execution drivers — the vmap
+virtual-worker path and the shard_map path — with fixed seeds and
+rounds-to-eps asserted within per-algorithm tolerance bands in the smoke
+tier (the CI gate).
 
 For each cell the modelled `comm_bytes_per_round` is checked against the
-optimized HLO of the sharded round: the derived per-round master traffic
-(2 x K x per-worker collective operand bytes, excluding the scalar
-metric psum) must equal the model exactly, and the `compressed` scheme
+optimized HLO of the sharded round: for master-centric schemes the
+derived per-round traffic is 2 x K x per-worker collective operand bytes
+(excluding the scalar metric psum); for `reduce_scatter` it is the ring
+volume — (K-1) x the reduce-scatter operand plus K x (K-1) x the
+all-gather operand, i.e. 2*(K-1)/K of the padded vector per worker each
+way. Derived must equal the model exactly, and the `compressed` scheme
 must move int8 tensors. `run_sharded` needs a multi-device mesh —
 `python -m repro.bench.run --smoke` fakes one via
 ``--xla_force_host_platform_device_count``; when only one device exists
@@ -31,9 +35,6 @@ from repro.core.glm import suboptimality
 
 SCHEMES = COMM_SCHEMES
 ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
-
-# MLlib-style 1/sqrt(t) schedule needs a tier-calibrated base step.
-SGD_STEP = {"smoke": 0.1, "quick": 0.05, "full": 0.05}
 
 # Fixed-seed rounds-to-eps bands per algorithm (smoke tier: m=96, n=256,
 # K=4, seed 42 data / seed 0 trainer). Measured centers ~15 / ~32 / ~93;
@@ -67,8 +68,9 @@ def _make_trainer(algo: str, wl, tier: str, K: int, scheme: str, seed: int):
 
     A, b, _ = common.problem(wl)
     if algo == "minibatch_sgd":
+        # the tier-calibrated MLlib-style base step lives on the workload
         return MinibatchSGD(
-            SGDConfig(batch_frac=1.0, step_size=SGD_STEP[tier],
+            SGDConfig(batch_frac=1.0, step_size=wl.sgd_step,
                       lam=wl.lam, K=K, seed=seed, comm_scheme=scheme), A, b)
     cfg = CoCoAConfig(K=K, H=common.n_local(wl, K), lam=wl.lam,
                       solver="scd_ref", comm_scheme=scheme, seed=seed)
@@ -124,9 +126,15 @@ def _run_sharded(tr, wl, eps, round_fn):
 
 def _hlo_traffic(tr, round_fn):
     """(derived bytes/round, int8 collective present) from the optimized
-    HLO of the sharded round. Derived = 2 x K x per-worker collective
+    HLO of the sharded round.
+
+    Master-centric schemes: derived = 2 x K x per-worker collective
     operand bytes; the one scalar f32 metric psum (4 bytes) is excluded
-    — everything else is update/state traffic through the master."""
+    — everything else is update/state traffic through the master.
+    ``reduce_scatter``: the ring volume — each worker moves (K-1)/K of
+    the reduce-scatter operand and (K-1) x its all-gather shard, so
+    derived = (K-1) x rs_operand + K x (K-1) x ag_operand (the metric
+    psum shows up as an all-reduce and is simply not counted)."""
     import jax
 
     from repro.utils.hlo import parse_collectives
@@ -135,13 +143,19 @@ def _hlo_traffic(tr, round_fn):
     txt = round_fn.jitted.lower(round_fn.split_keys(jax.random.key(0)),
                                 local, shared, 1).compile().as_text()
     stats = parse_collectives(txt)
-    derived = 2 * tr.cfg.K * (stats.total_operand_bytes - 4)
+    K = tr.cfg.K
+    if tr.scheme.name == "reduce_scatter":
+        _, rs_ob, _ = stats.by_kind.get("reduce-scatter", (0, 0, 0))
+        _, ag_ob, _ = stats.by_kind.get("all-gather", (0, 0, 0))
+        derived = (K - 1) * rs_ob + K * (K - 1) * ag_ob
+    else:
+        derived = 2 * K * (stats.total_operand_bytes - 4)
     int8 = bool(re.search(r"s8\[[0-9,]+\]\S* all-gather", txt))
     return derived, int8
 
 
 @benchmark("drivers", figures="§5.3-5.4",
-           description="3 algorithms x 3 comm schemes, virtual + sharded")
+           description="3 algorithms x 4 comm schemes, virtual + sharded")
 def run(ctx: BenchContext) -> dict:
     import jax
 
@@ -187,9 +201,16 @@ def run(ctx: BenchContext) -> dict:
                     assert lo <= r2e <= band_hi, (
                         f"{cell} rounds_to_eps={r2e} outside the "
                         f"calibrated band [{lo}, {band_hi}]")
-            counters[f"comm_bytes_per_round_{algo}_{scheme}"] = modelled
+            # the modelled bytes depend on the sharded worker count, so
+            # a device-starved run (K_sh < wl.K) must not emit counters
+            # that would pair with — and exactly mismatch — a full-mesh
+            # baseline under `compare --exact-counter`
+            suffix = "" if K_sh == wl.K else f"_K{K_sh}"
+            counters[f"comm_bytes_per_round_{algo}_{scheme}{suffix}"] = \
+                modelled
             if derived is not None:
-                counters[f"hlo_bytes_per_round_{algo}_{scheme}"] = derived
+                counters[f"hlo_bytes_per_round_{algo}_{scheme}{suffix}"] = \
+                    derived
                 assert modelled == derived, (
                     f"{algo}/{scheme}: modelled comm_bytes_per_round "
                     f"{modelled} != {derived} derived from the HLO "

@@ -5,7 +5,7 @@ from __future__ import annotations
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
 from repro.core import PROFILES
-from repro.core.tradeoff import optimal_H
+from repro.core.tradeoff import NoConvergedPointError, optimal_H
 
 IMPLS = ("B_spark_c", "D_pyspark_opt", "E_mpi")
 
@@ -14,14 +14,18 @@ IMPLS = ("B_spark_c", "D_pyspark_opt", "E_mpi")
            description="time-to-eps vs worker count, H re-optimized")
 def run(ctx: BenchContext) -> dict:
     wl = common.workload(ctx.tier)
-    rows, timings, counters = [], {}, {}
+    rows, timings, counters, notes = [], {}, {}, []
     for K_ in wl.scaling_ks:
         sweep = common.run_sweep(wl, K_=K_)
         # zero-overhead ideal (the paper's dashed line): compute only
         ideal = min((pt.rounds_to_eps * pt.t_solver_s
                      for pt in sweep.points if pt.rounds_to_eps), default=None)
         for name in IMPLS:
-            h_opt, t_opt = optimal_H(PROFILES[name], sweep)
+            try:
+                h_opt, t_opt = optimal_H(PROFILES[name], sweep)
+            except NoConvergedPointError as e:
+                notes.append(f"K={K_} {name}: optimum skipped — {e}")
+                continue
             rows.append({"K": K_, "impl": name, "H_opt": h_opt,
                          "time_to_eps_s": round(t_opt, 4)})
             timings[f"time_to_eps_K{K_}_{name}"] = t_opt
@@ -30,7 +34,6 @@ def run(ctx: BenchContext) -> dict:
             rows.append({"K": K_, "impl": "ideal_no_comm", "H_opt": "-",
                          "time_to_eps_s": round(ideal, 4)})
             timings[f"time_to_eps_K{K_}_ideal"] = ideal
-    notes = []
     for name in IMPLS + ("ideal_no_comm",):
         ts = [r["time_to_eps_s"] for r in rows if r["impl"] == name]
         if not ts:

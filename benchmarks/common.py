@@ -18,11 +18,17 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import CoCoAConfig, CoCoATrainer
-from repro.core.tradeoff import HSweep, HSweepPoint, measure_solver_time
+from repro.core import CoCoAConfig, CoCoATrainer, MinibatchSGD, SGDConfig
+from repro.core.tradeoff import (HSweep, HSweepPoint, make_trainer,
+                                 measure_solver_time)
 from repro.data import make_glm_data
 
 RESULTS_DIR = os.environ.get("BENCH_OUT", "results/bench")
+
+# schemes whose exchange is an exact f32 sum: identical trajectories
+# (the virtual driver sums all of them the same way), so a measured
+# sweep can be shared between them and only the byte accounting differs
+EXACT_SUM_SCHEMES = ("persistent", "spark_faithful", "reduce_scatter")
 
 
 @dataclass(frozen=True)
@@ -41,6 +47,8 @@ class Workload:
     scaling_ks: tuple       # worker counts for Fig 8
     kernel_shapes: tuple    # (m, n, H) triples for the microbench
     reps: int               # timing repetitions
+    sgd_step: float         # MLlib-style base step size for the tier
+    sgd_h_grid: tuple       # local-SGD H grid (local steps per round)
     seed: int = 42
     # smoke-tier tolerance band on measured rounds-to-eps at H = n_local
     # (deterministic given the fixed seeds; band is ~3x around measured)
@@ -53,19 +61,19 @@ WORKLOADS: dict[str, Workload] = {
         h_fracs=(0.2, 1.0, 4.0), max_rounds=400,
         decomp_rounds=10, sgd_rounds=400, scaling_ks=(2, 4),
         kernel_shapes=((64, 64, 64), (128, 64, 128)),
-        reps=1, rounds_band=(2, 180)),
+        reps=1, sgd_step=0.1, sgd_h_grid=(1, 4), rounds_band=(2, 180)),
     "quick": Workload(
         m=256, n=1024, K=8, density=0.15, eps=1e-3, lam=1.0,
         h_fracs=(0.05, 0.2, 1.0, 4.0), max_rounds=1000,
         decomp_rounds=50, sgd_rounds=2000, scaling_ks=(2, 4, 8),
         kernel_shapes=((256, 256, 256), (512, 256, 512)),
-        reps=2),
+        reps=2, sgd_step=0.05, sgd_h_grid=(1, 4, 16)),
     "full": Workload(
         m=512, n=2048, K=8, density=0.15, eps=1e-3, lam=1.0,
         h_fracs=(0.05, 0.2, 1.0, 4.0, 16.0), max_rounds=1500,
         decomp_rounds=100, sgd_rounds=4000, scaling_ks=(2, 4, 8, 16),
         kernel_shapes=((256, 256, 256), (512, 256, 512), (1024, 512, 1024)),
-        reps=2),
+        reps=2, sgd_step=0.05, sgd_h_grid=(1, 4, 16)),
 }
 
 # Back-compat aliases (the old module-level constants = the full tier).
@@ -127,28 +135,73 @@ def trainer(wl: Workload, H: int, solver: str = "scd_kernel",
         A, b)
 
 
+def bench_trainer(wl: Workload, algorithm: str, H: int,
+                  solver: str = "scd_kernel", K_: int | None = None,
+                  seed: int = 0, scheme: str = "persistent"):
+    """Any of the three driver-layer algorithms on the tier workload."""
+    A, b, _ = problem(wl)
+    K_ = K_ or wl.K
+    if algorithm == "minibatch_sgd":
+        cfg = SGDConfig(batch_frac=1.0, step_size=wl.sgd_step, lam=wl.lam,
+                        K=K_, H=H, seed=seed, comm_scheme=scheme)
+    else:
+        cfg = CoCoAConfig(K=K_, H=H, lam=wl.lam, eta=1.0, solver=solver,
+                          comm_scheme=scheme, seed=seed)
+    return make_trainer(algorithm, cfg, A, b)
+
+
+def sweep_eps(wl: Workload, algorithm: str) -> float:
+    """The sqrt-decay SGD schedule cannot hit the CoCoA-family eps in
+    tier budgets; 10x looser still separates schemes and frameworks."""
+    return 10 * wl.eps if algorithm == "minibatch_sgd" else wl.eps
+
+
 def run_sweep(wl: Workload, K_: int | None = None,
-              solver: str = "scd_kernel") -> HSweep:
-    """Measured rounds-to-eps + solver wall time per H (paper Fig 6 raw),
-    cached per (tier workload, K, solver).
+              solver: str = "scd_kernel", algorithm: str = "cocoa",
+              scheme: str = "persistent") -> HSweep:
+    """Measured rounds-to-eps + solver wall time per H (paper Fig 6 raw)
+    for any algorithm x comm scheme on the driver layer, cached per
+    (tier workload, K, solver, algorithm, scheme).
 
     The K virtual workers execute SERIALLY on this host, so the measured
     per-round solver time is divided by K to model the real cluster where
     workers run concurrently (the paper's setting).
+
+    Exact-sum schemes (persistent / spark_faithful / reduce_scatter)
+    share one measured trajectory — the virtual driver reduces all of
+    them with the same f32 sum, so only the modelled traffic differs;
+    ``compressed`` really is re-run (int8 error changes the trajectory).
     """
     K_ = K_ or wl.K
-    key = (wl, K_, solver)
+    key = (wl, K_, solver, algorithm, scheme)
     if key in _SWEEPS:
         return _SWEEPS[key]
+    if scheme in EXACT_SUM_SCHEMES and scheme != "persistent":
+        base = run_sweep(wl, K_, solver, algorithm, "persistent")
+        sweep = HSweep(
+            eps=base.eps, n_local=base.n_local, t_ref_s=base.t_ref_s,
+            points=list(base.points), algorithm=algorithm, scheme=scheme,
+            comm_bytes_per_round=bench_trainer(
+                wl, algorithm, base.n_local, solver, K_,
+                scheme=scheme).comm_bytes_per_round())
+        _SWEEPS[key] = sweep
+        return sweep
     nl = n_local(wl, K_)
-    sweep = HSweep(eps=wl.eps, n_local=nl)
-    for H in h_grid(wl, K_):
-        tr = trainer(wl, H, solver, K_)
-        hist = tr.run(wl.max_rounds, record_every=1, target_eps=wl.eps)
+    eps = sweep_eps(wl, algorithm)
+    grid = (wl.sgd_h_grid if algorithm == "minibatch_sgd"
+            else h_grid(wl, K_))
+    sweep = HSweep(eps=eps, n_local=nl, algorithm=algorithm, scheme=scheme)
+    for H in grid:
+        tr = bench_trainer(wl, algorithm, H, solver, K_, scheme=scheme)
+        hist = (tr.run_workers(wl.max_rounds, record_every=1, target_eps=eps)
+                if algorithm == "minibatch_sgd"
+                else tr.run(wl.max_rounds, record_every=1, target_eps=eps))
         t_s = measure_solver_time(tr, H, reps=wl.reps) / K_
-        sweep.points.append(HSweepPoint(H, hist.rounds_to(wl.eps), t_s))
-    sweep.t_ref_s = measure_solver_time(trainer(wl, nl, solver, K_), nl,
-                                        reps=wl.reps) / K_
+        sweep.points.append(HSweepPoint(H, hist.rounds_to(eps), t_s))
+        sweep.comm_bytes_per_round = tr.comm_bytes_per_round()
+    sweep.t_ref_s = measure_solver_time(
+        bench_trainer(wl, algorithm, nl, solver, K_, scheme=scheme), nl,
+        reps=wl.reps) / K_
     _SWEEPS[key] = sweep
     return sweep
 

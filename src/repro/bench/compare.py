@@ -8,6 +8,12 @@ new/old ratio exceeds ``--max-regression`` is a regression and the tool
 exits nonzero (so CI can gate). Improvements and new metrics pass.
 Sub-millisecond timings are floored at ``--min-time`` before the ratio
 so dispatch jitter on trivial measurements cannot fail the gate.
+
+``--exact-counter PREFIX`` (repeatable) additionally gates ``counters``
+whose names start with PREFIX on EXACT equality — for machine-
+independent modelled quantities (e.g. ``comm_bytes_per_round_`` from
+the drivers/h_sweep benchmarks), where any drift means the byte
+accounting changed, not that the host got slower.
 """
 from __future__ import annotations
 
@@ -45,6 +51,25 @@ def compare_results(old: schema.BenchResult, new: schema.BenchResult,
     return deltas
 
 
+def compare_counters(old: schema.BenchResult, new: schema.BenchResult,
+                     prefixes: list[str]) -> list[Delta]:
+    """Exact-equality deltas over counters matching any of ``prefixes``.
+    Counters present only on one side are skipped (coverage growth and
+    device-starved hosts must not fail the gate)."""
+    deltas = []
+    for name, c_old in sorted(old.counters.items()):
+        if not any(name.startswith(p) for p in prefixes):
+            continue
+        if name not in new.counters:
+            continue
+        c_new = new.counters[name]
+        deltas.append(Delta(old.benchmark, name, float(c_old), float(c_new),
+                            float("nan") if not c_old
+                            else float(c_new) / float(c_old),
+                            float(c_new) != float(c_old)))
+    return deltas
+
+
 def _pair_paths(old: str, new: str) -> list[tuple[str, str]]:
     """(old, new) file pairs; dirs are matched on BENCH_*.json filename."""
     if os.path.isdir(old) != os.path.isdir(new):
@@ -72,6 +97,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="fail when new/old exceeds this ratio (default 1.25)")
     ap.add_argument("--min-time", type=float, default=1e-4,
                     help="floor (seconds) applied before the ratio")
+    ap.add_argument("--exact-counter", action="append", default=[],
+                    metavar="PREFIX",
+                    help="gate counters starting with PREFIX on exact "
+                         "equality (repeatable)")
     args = ap.parse_args(argv)
 
     regressions = 0
@@ -95,6 +124,11 @@ def main(argv: list[str] | None = None) -> int:
                 "improved" if d.ratio < 1.0 else "ok")
             print(f"{d.benchmark:<12s} {d.metric:<36s} "
                   f"{d.old:10.5f}s -> {d.new:10.5f}s  x{d.ratio:5.2f}  {verdict}")
+            regressions += d.regression
+        for d in compare_counters(old, new, args.exact_counter):
+            verdict = "MISMATCH" if d.regression else "exact"
+            print(f"{d.benchmark:<12s} {d.metric:<36s} "
+                  f"{d.old:12.0f}  -> {d.new:12.0f}   {verdict}")
             regressions += d.regression
     if regressions:
         print(f"# {regressions} regression(s) beyond "

@@ -1,13 +1,21 @@
-"""The measurement discipline every benchmark shares: warmup, repeat, min.
+"""The measurement discipline every benchmark shares: warmup, repeat, min
+— plus the link calibration that turns communicated bytes into seconds.
 
 Moved here from ``core/tradeoff.py`` so the whole harness (kernel
-microbenches, solver rounds, master step) times things the same way:
-jit/compile excluded by warmup calls, dispatch noise suppressed by
-taking the best of ``reps`` repetitions, async jax work flushed with
-``block_until_ready`` inside the timed region.
+microbenches, solver rounds, master step, link ping-pong) times things
+the same way: jit/compile excluded by warmup calls, dispatch noise
+suppressed by taking the best of ``reps`` repetitions, async jax work
+flushed with ``block_until_ready`` inside the timed region.
+
+:func:`calibrate_link` measures the (bandwidth, latency) of the actual
+collective a :class:`~repro.core.distributed.CommScheme` uses on the
+current mesh; the resulting :class:`LinkCalibration` feeds
+``core.tradeoff.TimeModel`` so the H-autotuner charges each scheme its
+real wall-clock traffic (paper §5.5, Figs 6-7).
 """
 from __future__ import annotations
 
+import dataclasses
 import statistics
 import time
 from dataclasses import dataclass
@@ -51,14 +59,118 @@ def time_callable(fn, *args, policy: TimingPolicy = DEFAULT_POLICY,
 def measure_solver_time(trainer, H: int, reps: int = 3,
                         warmup: int = 1) -> float:
     """Wall time of one (jitted) local-solver round at the given H —
-    plays the role of the paper's measured T_worker per round."""
+    plays the role of the paper's measured T_worker per round.
+
+    Works for any trainer on the unified driver layer (CoCoA, mini-batch
+    SCD, mini-batch SGD): the trainer is re-instantiated at ``H`` via
+    its ``with_H`` clone and its virtual round is timed on fresh state.
+    """
     import jax
 
-    from repro.core.cocoa import CoCoAConfig, CoCoATrainer
-
-    cfg = CoCoAConfig(**{**trainer.cfg.__dict__, "H": H})
-    t = CoCoATrainer(cfg, trainer.A_np, trainer.b_np)
-    alpha, w = t.init_state()
-    key = jax.random.key(0)
-    return time_callable(t._round_fn, alpha, w, key,
+    t = trainer.with_H(int(H))
+    local, shared = t.init_state()
+    return time_callable(t._round_fn, local, shared, jax.random.key(0),
                          policy=TimingPolicy(warmup=warmup, reps=reps))
+
+
+# ---------------------------------------------------------------------------
+# link calibration: bytes -> seconds
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LinkCalibration:
+    """A fitted ``t(nbytes) = latency_s + nbytes / bandwidth_Bps`` model
+    of one communication scheme's collective on one mesh."""
+    bandwidth_Bps: float        # bytes per second on the wire
+    latency_s: float = 0.0      # fixed per-round cost (dispatch, sync)
+    source: str = "measured"    # measured | synthetic
+
+    def __post_init__(self):
+        if not self.bandwidth_Bps > 0:
+            raise ValueError(f"bandwidth must be > 0, got "
+                             f"{self.bandwidth_Bps!r}")
+        if self.latency_s < 0:
+            raise ValueError(f"latency must be >= 0, got {self.latency_s!r}")
+
+    def seconds_for(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+    def scaled(self, bandwidth_mult: float) -> "LinkCalibration":
+        """A synthetic what-if link with scaled bandwidth (e.g. 0.01 for
+        a 100x slower interconnect) and unchanged latency."""
+        return dataclasses.replace(self, bandwidth_Bps=self.bandwidth_Bps
+                                   * bandwidth_mult, source="synthetic")
+
+
+def synthetic_link(bandwidth_Bps: float,
+                   latency_s: float = 0.0) -> LinkCalibration:
+    """A deterministic calibration for tests and what-if modelling (the
+    fake-bandwidth path: no collectives run, no measurement noise)."""
+    return LinkCalibration(bandwidth_Bps, latency_s, source="synthetic")
+
+
+# ping-pong payload lengths (f32 elements); two decades apart so the
+# least-squares fit separates the latency intercept from the 1/bw slope
+CALIBRATION_LENGTHS = (1 << 10, 1 << 14, 1 << 17)
+
+
+def calibrate_link(scheme_name: str = "persistent", mesh=None,
+                   lengths: tuple = CALIBRATION_LENGTHS,
+                   policy: TimingPolicy = TimingPolicy(warmup=2, reps=5),
+                   fake_bandwidth_Bps: float | None = None,
+                   fake_latency_s: float = 0.0) -> LinkCalibration:
+    """Measure (bandwidth, latency) of ``scheme_name``'s actual
+    collective on the current mesh.
+
+    Ping-pong: for each payload length the scheme's ``all_reduce`` is
+    jitted under ``shard_map`` on ``mesh`` (default: a 1-D ``workers``
+    mesh over every visible device) and timed under ``policy``; the
+    scheme's own ``bytes_per_round`` provides the x-axis and a
+    least-squares line through (bytes, seconds) yields
+    ``1/bandwidth`` (slope) and ``latency`` (intercept).
+
+    ``fake_bandwidth_Bps`` bypasses measurement entirely and returns a
+    deterministic :func:`synthetic_link` — the path tests and
+    single-device hosts use.
+    """
+    if fake_bandwidth_Bps is not None:
+        return synthetic_link(fake_bandwidth_Bps, fake_latency_s)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import get_scheme
+    from repro.utils import compat
+
+    scheme = get_scheme(scheme_name)
+    if mesh is None:
+        mesh = compat.make_mesh((len(jax.devices()),), ("workers",))
+    axis = mesh.axis_names[0]
+    K = mesh.devices.size
+
+    xs, ys = [], []
+    for L in lengths:
+        fn = jax.jit(compat.shard_map(
+            lambda u: scheme.all_reduce(u[0], axis)[None],
+            mesh, in_specs=P(axis), out_specs=P(axis)))
+        payload = jnp.ones((K, int(L)), jnp.float32)
+        xs.append(scheme.bytes_per_round(int(L), K))
+        ys.append(time_callable(fn, payload, policy=policy))
+    if K == 1 or max(xs) == min(xs):
+        # a K=1 "mesh" moves zero bytes — XLA elides single-participant
+        # collectives whatever the scheme's accounting says — so all
+        # that is measurable is the dispatch latency; fitting a slope
+        # to that noise would return a garbage "measured" bandwidth
+        return LinkCalibration(bandwidth_Bps=float("inf"),
+                               latency_s=max(min(ys), 0.0),
+                               source="measured")
+    slope, intercept = np.polyfit(np.asarray(xs, float),
+                                  np.asarray(ys, float), 1)
+    # dispatch jitter can produce a non-physical fit on tiny payloads;
+    # clamp to a sane always-positive model instead of failing
+    if slope <= 0:
+        slope = max(ys) / max(xs)
+    return LinkCalibration(bandwidth_Bps=1.0 / slope,
+                           latency_s=max(float(intercept), 0.0),
+                           source="measured")

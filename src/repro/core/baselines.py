@@ -53,18 +53,29 @@ class SGDConfig:
     lam: float = 1.0
     eta: float = 1.0
     K: int = 8
+    H: int = 1                       # local SGD steps per round (H=1: MLlib)
     seed: int = 0
-    comm_scheme: str = "persistent"  # persistent | spark_faithful | compressed
+    comm_scheme: str = "persistent"  # one of distributed.COMM_SCHEMES
 
     def __post_init__(self):
         dist.get_scheme(self.comm_scheme)  # fail loudly on typos
+        if self.H < 1:
+            raise ValueError(f"H must be >= 1, got {self.H}")
 
 
 class _SGDRound:
     """Mini-batch SGD's plug into the generic round drivers: each worker
     owns a row block, samples a local mini-batch, and contributes an
     n-dimensional partial gradient to the all-reduce; the step-size
-    schedule and the l1 proximal step run on the aggregated gradient."""
+    schedule and the l1 proximal step run on the aggregated gradient.
+
+    With ``H > 1`` the round is *local SGD* (the local-updates line the
+    paper's trade-off generalizes to): each worker takes H proximal
+    steps on a private model copy — its partial gradient scaled by K
+    stands in for the full gradient — and the all-reduced quantity is
+    the model delta, averaged by ``apply_update``. ``H=1`` keeps the
+    exact MLlib-style single aggregated step (bit-identical RNG and
+    float order), so the default path is unchanged."""
 
     def __init__(self, cfg: SGDConfig, problem: GLMProblem,
                  m_local: int, batch_local: int):
@@ -72,24 +83,48 @@ class _SGDRound:
         self.m_local, self.batch_local = m_local, batch_local
         self.scale = m_local / batch_local
 
-    def local_step(self, data_k, local_k, alpha, key, t):
-        A_k, b_k = data_k                 # (m_local, n), (m_local,)
+    def _partial_grad(self, A_k, b_k, alpha, key):
         rows = jax.random.choice(key, self.m_local,
                                  shape=(self.batch_local,), replace=False)
         A_s, b_s = A_k[rows], b_k[rows]
         resid = A_s @ alpha - b_s
-        grad = (A_s.T @ resid) * self.scale
-        return grad, local_k
+        return (A_s.T @ resid) * self.scale
 
-    def apply_update(self, alpha, grad_total, t):
-        cfg = self.cfg
-        grad = grad_total + cfg.lam * cfg.eta * alpha
-        lr = cfg.step_size / jnp.sqrt(jnp.asarray(t, jnp.float32))
+    def _prox_step(self, alpha, grad, lr):
         alpha_new = alpha - lr * grad
         # L1 proximal step for the elastic-net case.
-        thresh = lr * cfg.lam * (1.0 - cfg.eta)
+        thresh = lr * self.cfg.lam * (1.0 - self.cfg.eta)
         return jnp.sign(alpha_new) * jnp.maximum(
             jnp.abs(alpha_new) - thresh, 0.0)
+
+    def local_step(self, data_k, local_k, alpha, key, t):
+        cfg = self.cfg
+        A_k, b_k = data_k                 # (m_local, n), (m_local,)
+        if cfg.H == 1:
+            return self._partial_grad(A_k, b_k, alpha, key), local_k
+        lr = cfg.step_size / jnp.sqrt(jnp.asarray(t, jnp.float32))
+
+        def body(alpha_loc, key_h):
+            # K x the partial gradient ~= the full gradient from this
+            # worker's rows alone (exact in expectation under uniform
+            # row partitioning)
+            g = (cfg.K * self._partial_grad(A_k, b_k, alpha_loc, key_h)
+                 + cfg.lam * cfg.eta * alpha_loc)
+            return self._prox_step(alpha_loc, g, lr), None
+
+        alpha_H, _ = jax.lax.scan(body, alpha,
+                                  jax.random.split(key, cfg.H))
+        return alpha_H - alpha, local_k
+
+    def apply_update(self, alpha, total, t):
+        cfg = self.cfg
+        if cfg.H > 1:
+            # total is the summed model delta: average the H-step local
+            # models (the classic local-SGD combiner)
+            return alpha + total / cfg.K
+        grad = total + cfg.lam * cfg.eta * alpha
+        lr = cfg.step_size / jnp.sqrt(jnp.asarray(t, jnp.float32))
+        return self._prox_step(alpha, grad, lr)
 
     def local_metric(self, data_k, local_k, alpha_new):
         A_k, b_k = data_k                 # zero-padded rows contribute 0
@@ -105,8 +140,10 @@ class MinibatchSGD:
 
     def __init__(self, cfg: SGDConfig, A: np.ndarray, b: np.ndarray):
         self.cfg = cfg
-        self.A = jnp.asarray(A, jnp.float32)
-        self.b = jnp.asarray(b, jnp.float32)
+        self.A_np = np.asarray(A, np.float32)
+        self.b_np = np.asarray(b, np.float32)
+        self.A = jnp.asarray(self.A_np)
+        self.b = jnp.asarray(self.b_np)
         self.m, self.n = A.shape
         self.problem = GLMProblem(lam=cfg.lam, eta=cfg.eta)
         self.scheme = dist.get_scheme(cfg.comm_scheme)
@@ -167,6 +204,12 @@ class MinibatchSGD:
         local = jnp.zeros((self.cfg.K, 0), jnp.float32)
         alpha = jnp.zeros(self.n, jnp.float32)
         return local, alpha
+
+    def with_H(self, H: int) -> "MinibatchSGD":
+        """Fresh trainer with the local-update count moved (the H-sweep
+        clone hook shared with the CoCoA-family trainers)."""
+        return type(self)(dataclasses.replace(self.cfg, H=int(H)),
+                          self.A_np, self.b_np)
 
     def comm_bytes_per_round(self) -> int:
         """Modelled bytes through the master per round: the n-vector

@@ -24,12 +24,16 @@ see ``distributed.CommScheme`` for the mechanics and byte accounting):
   * ``compressed``      — int8-quantized Delta v exchange (4x less
     traffic than f32) through the one shared quantizer in
     ``distributed.quantize_update``.
+  * ``reduce_scatter``  — the Delta v exchange as an explicit
+    ``psum_scatter`` + ``all_gather`` ring pair: 2*(K-1)/K of the
+    vector per worker each way, the cheapest exact f32 exchange.
 
 Mini-batch SCD (the paper's §2.1 baseline) runs the same drivers with
 the fixed-residual solver — see ``repro.core.baselines.MinibatchSCD``.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -53,7 +57,7 @@ class CoCoAConfig:
     eta: float = 1.0                 # 1.0 = ridge
     sigma: float | None = None       # subproblem safety; default K ("adding")
     solver: str = "scd_ref"          # scd_ref | scd_kernel | scd_fixed
-    comm_scheme: str = "persistent"  # persistent | spark_faithful | compressed
+    comm_scheme: str = "persistent"  # one of distributed.COMM_SCHEMES
     partitioner: str = "balanced"    # balanced | block
     seed: int = 0
 
@@ -181,6 +185,14 @@ class CoCoATrainer:
         alpha = jnp.zeros((self.cfg.K, self.part.n_padded), jnp.float32)
         w = -self.b  # w = A @ 0 - b
         return alpha, w
+
+    def with_H(self, H: int) -> "CoCoATrainer":
+        """A fresh trainer on the same problem with the H knob moved —
+        the one sanctioned way to perturb a config (``dataclasses.replace``
+        survives the dataclass gaining derived/non-init fields, a
+        ``**cfg.__dict__`` splat does not)."""
+        return type(self)(dataclasses.replace(self.cfg, H=int(H)),
+                          self.A_np, self.b_np)
 
     def comm_bytes_per_round(self) -> int:
         """Modelled bytes through the master per round under the

@@ -7,7 +7,8 @@ CoCoA, mini-batch SCD, and mini-batch SGD. That comparison is only
 meaningful when every algorithm runs under the same communication
 substrate, so this module factors it out:
 
-  * :class:`CommScheme` — the three communication schemes
+  * :class:`CommScheme` — the paper's communication schemes plus two
+    beyond-paper variants
 
       - ``persistent``      per-worker state lives on its worker across
         rounds (the paper's "persistent local memory" / (B)*, (D)*
@@ -20,6 +21,11 @@ substrate, so this module factors it out:
       - ``compressed``      beyond-paper: int8-quantized updates (4x
         less traffic than f32) with a per-worker absmax scale travelling
         as a tiny f32 alongside; dequant + sum happens locally.
+      - ``reduce_scatter``  beyond-paper: the update exchange as an
+        explicit ``psum_scatter`` + ``all_gather`` pair (the classic
+        ring decomposition of all-reduce) — each worker moves only
+        2·(K-1)/K of the update vector each way instead of the full
+        vector, the cheapest exact f32 exchange on a ring.
 
     with the ONE shared quantize/dequantize pair (both execution drivers
     call it, so they cannot drift) and byte accounting sized to what the
@@ -50,7 +56,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.utils import compat
 
-COMM_SCHEMES = ("persistent", "spark_faithful", "compressed")
+COMM_SCHEMES = ("persistent", "spark_faithful", "compressed",
+                "reduce_scatter")
 
 FP_ITEMSIZE = 4        # every dense array in the system is float32
 INT8_ITEMSIZE = 1
@@ -113,6 +120,19 @@ class CommScheme:
             # collected at the master and re-broadcast, not reduced
             # in-place — identity, but the traffic is real.
             return jnp.sum(lax.all_gather(update, axis), axis=0)
+        if self.name == "reduce_scatter":
+            # explicit ring decomposition: reduce-scatter the (padded)
+            # update so each worker owns one reduced L/K segment, then
+            # all-gather the segments back. lax.psum(1, axis) folds to
+            # the static axis size, so the pad amount is concrete.
+            L = update.shape[0]
+            K = lax.psum(1, axis)
+            pad = -L % K
+            if pad:
+                update = jnp.concatenate(
+                    [update, jnp.zeros((pad,), update.dtype)])
+            seg = lax.psum_scatter(update, axis, tiled=True)
+            return lax.all_gather(seg, axis, tiled=True)[:L]
         return lax.psum(update, axis)
 
     # -- aggregation over stacked (K, L) updates (virtual driver) ----------
@@ -136,15 +156,21 @@ class CommScheme:
     # -- modelled traffic --------------------------------------------------
     def bytes_per_round(self, update_len: int, K: int,
                         local_state_len: int = 0) -> int:
-        """Bytes through the master per round (paper Fig 1 + §5.3),
-        sized to the dtypes the collectives actually move.
+        """Bytes on the wire per round (paper Fig 1 + §5.3), sized to
+        the dtypes the collectives actually move.
 
-        Always: K workers send their ``update_len``-vector up and
-        receive the aggregate back (f32, or int8 + a 4-byte f32 scale
-        under ``compressed``). ``spark_faithful`` additionally ships the
-        ``local_state_len`` total elements of per-worker persistent
-        state up and down in f32.
+        Master-centric schemes: K workers send their ``update_len``-
+        vector up and receive the aggregate back (f32, or int8 + a
+        4-byte f32 scale under ``compressed``). ``spark_faithful``
+        additionally ships the ``local_state_len`` total elements of
+        per-worker persistent state up and down in f32.
+        ``reduce_scatter`` has no master: each worker moves
+        (K-1)/K of the (K-padded) update each way on the ring —
+        ``2*(K-1)*len_pad*4`` bytes in total.
         """
+        if self.name == "reduce_scatter":
+            len_pad = -(update_len // -K) * K
+            return 2 * (K - 1) * len_pad * FP_ITEMSIZE
         if self.name == "compressed":
             v = 2 * K * (update_len * INT8_ITEMSIZE + QUANT_SCALE_BYTES)
         else:

@@ -23,6 +23,12 @@ calibrated to the paper's stated ratios:
 
 With T_worker(C++) := 1 unit (~= 30s/100 rounds in Fig 3), the paper's
 bars give A ~= 2.0 units of overhead and C ~= 30 units.
+
+``OverheadProfile.round_time`` charges framework overhead only; the
+scheme's communication wall-clock (bytes / measured bandwidth + latency)
+is charged on top by ``repro.core.tradeoff.TimeModel``, which wraps a
+profile together with :func:`communicated_bytes_per_round`-style traffic
+and a link calibration from ``repro.bench.timing.calibrate_link``.
 """
 from __future__ import annotations
 
@@ -82,11 +88,13 @@ def communicated_bytes_per_round(m: int, n: int, K: int,
     Non-persistent schemes additionally ship the full alpha up and down.
     Every dense array in the system is float32, hence ``itemsize=4``.
 
-    ``scheme`` (``persistent | spark_faithful | compressed``) switches to
-    the :class:`repro.core.distributed.CommScheme` accounting, which also
-    covers the int8 ``compressed`` exchange (m bytes + a 4-byte f32
-    scale per worker, each way) and overrides ``persistent_alpha`` /
-    ``itemsize``. The alpha round-trip then counts K zero-padded
+    ``scheme`` (any of ``repro.core.distributed.COMM_SCHEMES``) switches
+    to the :class:`repro.core.distributed.CommScheme` accounting, which
+    also covers the int8 ``compressed`` exchange (m bytes + a 4-byte f32
+    scale per worker, each way) and the masterless ``reduce_scatter``
+    ring (2*(K-1)/K of the K-padded vector per worker each way), and
+    overrides ``persistent_alpha`` / ``itemsize``. The alpha round-trip
+    then counts K zero-padded
     ``ceil(n/K)`` blocks — the even/block-partition layout (the analytic
     path below keeps the paper's unpadded ``n``). For a concrete trainer
     prefer ``CoCoATrainer.comm_bytes_per_round()``: the balanced

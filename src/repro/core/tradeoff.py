@@ -1,29 +1,54 @@
 """The communication-computation trade-off machinery (paper §5.5, Figs 6-7).
 
-``H`` — local SCD steps per round — is *the* tuning knob: more local work
+``H`` — local steps per round — is *the* tuning knob: more local work
 per round means fewer (expensive) communication rounds but diminishing
 convergence benefit per round. The optimum depends on the framework's
-per-round overhead, which is why the paper finds optimal H differing by
->25x between implementations of the same algorithm on the same hardware.
+per-round overhead AND on the per-round communication wall-clock, which
+is why the paper finds optimal H differing by >25x between
+implementations of the same algorithm on the same hardware.
 
 This module provides the sweep + autotuner used by the benchmarks and by
 ``optim/local_updates.py``'s roofline-driven variant for transformer
 training. Sweeps ride the unified distributed-driver layer
-(``repro.core.distributed``): ``base_cfg.comm_scheme`` threads through
-every grid point. Per-round traffic under a scheme is available via
-``CoCoATrainer.comm_bytes_per_round()`` / the scheme-aware
-``overheads.communicated_bytes_per_round``; charging it as wall-clock
-in the autotuner's time model is still future work (see ROADMAP).
+(``repro.core.distributed``) for **all three algorithms** (CoCoA,
+mini-batch SCD, mini-batch SGD-as-local-SGD) under every comm scheme:
+``base_cfg.comm_scheme`` threads through every grid point.
+
+Per-round traffic under a scheme (``CommScheme.bytes_per_round``,
+HLO-verified by the ``drivers`` benchmark) is converted to seconds by
+:class:`TimeModel`: ``comm_bytes / measured_bandwidth + latency`` on top
+of the framework profile's calibrated overhead, with bandwidth/latency
+measured live by ``repro.bench.timing.calibrate_link`` (a ping-pong over
+the scheme's actual collective on the current mesh). Every grid point in
+``sweep_H`` / ``optimal_H`` / ``autotune_H`` is therefore charged its
+scheme's real wall-clock traffic — the paper's Figs 6-7 axis.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.bench.timing import measure_solver_time  # noqa: F401  (re-export)
+from repro.bench.timing import (LinkCalibration, calibrate_link,  # noqa: F401
+                                measure_solver_time, synthetic_link)
+from repro.core.baselines import MinibatchSCD, MinibatchSGD, SGDConfig
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer
 from repro.core.overheads import OverheadProfile
+
+SWEEP_ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
+
+
+class NoConvergedPointError(RuntimeError):
+    """No grid point reached the target eps — there is no optimum to
+    report. Carries the sweep so callers can show what was tried."""
+
+    def __init__(self, sweep: "HSweep"):
+        self.sweep = sweep
+        grid = [p.H for p in sweep.points]
+        super().__init__(
+            f"no H in {grid} reached eps={sweep.eps} "
+            f"(algorithm={sweep.algorithm!r}, scheme={sweep.scheme!r})")
 
 
 @dataclass
@@ -39,63 +64,157 @@ class HSweep:
     n_local: int
     t_ref_s: float = float("nan")  # measured t_solver at H = n_local
     points: list = field(default_factory=list)
+    algorithm: str = "cocoa"
+    scheme: str = "persistent"
+    comm_bytes_per_round: int = 0  # modelled wire traffic (H-independent)
 
 
 # measure_solver_time lives in repro.bench.timing (the harness's shared
 # warmup/repeat/min discipline) and is re-exported above for back-compat.
 
 
-def sweep_H(A, b, base_cfg: CoCoAConfig, H_grid, eps: float = 1e-3,
-            max_rounds: int = 2000, measure: bool = True) -> HSweep:
+@dataclass(frozen=True)
+class TimeModel:
+    """Scheme-aware wall-clock model of one round:
+
+        t_round(H) = profile.round_time(t_solver, t_ref)
+                     + comm_bytes_per_round / bandwidth + latency
+
+    The first term is the paper's calibrated framework overhead
+    (§5.2/Fig 3); the second charges the scheme's modelled wire traffic
+    against a :class:`~repro.bench.timing.LinkCalibration` (measured by
+    ``calibrate_link`` or synthetic for what-if studies). With
+    ``link=None`` the model degrades to the bare profile, so every
+    pre-existing call site keeps its behavior.
+    """
+    profile: OverheadProfile
+    comm_bytes_per_round: int = 0
+    link: LinkCalibration | None = None
+
+    @property
+    def name(self) -> str:
+        return self.profile.name
+
+    def comm_time_s(self) -> float:
+        if self.link is None or self.comm_bytes_per_round <= 0:
+            return 0.0
+        return self.link.seconds_for(self.comm_bytes_per_round)
+
+    def round_time(self, t_solver_s: float, t_ref_s: float,
+                   t_master_s: float = 0.0) -> float:
+        return (self.profile.round_time(t_solver_s, t_ref_s, t_master_s)
+                + self.comm_time_s())
+
+    def compute_fraction(self, t_solver_s: float, t_ref_s: float) -> float:
+        c = self.profile.compute_mult * t_solver_s
+        other = self.profile.overhead_units * t_ref_s + self.comm_time_s()
+        return c / max(c + other, 1e-30)
+
+    def for_sweep(self, sweep: "HSweep") -> "TimeModel":
+        """The same model charged with a sweep's modelled traffic."""
+        return dataclasses.replace(
+            self, comm_bytes_per_round=sweep.comm_bytes_per_round)
+
+
+def make_trainer(algorithm: str, cfg, A, b):
+    """One trainer on the unified driver layer; ``cfg`` must match the
+    algorithm family (CoCoAConfig for cocoa/minibatch_scd, SGDConfig for
+    minibatch_sgd)."""
+    if algorithm == "cocoa":
+        return CoCoATrainer(cfg, A, b)
+    if algorithm == "minibatch_scd":
+        return MinibatchSCD(cfg, A, b)
+    if algorithm == "minibatch_sgd":
+        if not isinstance(cfg, SGDConfig):
+            raise TypeError(f"minibatch_sgd needs an SGDConfig, got "
+                            f"{type(cfg).__name__}")
+        return MinibatchSGD(cfg, A, b)
+    raise ValueError(f"unknown algorithm {algorithm!r}; "
+                     f"known: {SWEEP_ALGORITHMS}")
+
+
+def sweep_H(A, b, base_cfg, H_grid, eps: float = 1e-3,
+            max_rounds: int = 2000, measure: bool = True,
+            algorithm: str = "cocoa") -> HSweep:
+    """Measured rounds-to-eps + solver wall time per H for ANY algorithm
+    on the driver layer, under ``base_cfg.comm_scheme``. Configs are
+    perturbed with ``dataclasses.replace`` (never a ``__dict__`` splat,
+    which silently breaks once a dataclass gains derived fields)."""
     n_local = int(np.ceil(A.shape[1] / base_cfg.K))
-    sweep = HSweep(eps=eps, n_local=n_local)
+    sweep = HSweep(eps=eps, n_local=n_local, algorithm=algorithm,
+                   scheme=base_cfg.comm_scheme)
     for H in H_grid:
-        cfg = CoCoAConfig(**{**base_cfg.__dict__, "H": int(H)})
-        trainer = CoCoATrainer(cfg, A, b)
-        hist = trainer.run(max_rounds, record_every=1, target_eps=eps)
+        cfg = dataclasses.replace(base_cfg, H=int(H))
+        trainer = make_trainer(algorithm, cfg, A, b)
+        hist = (trainer.run_workers(max_rounds, record_every=1,
+                                    target_eps=eps)
+                if isinstance(trainer, MinibatchSGD)
+                else trainer.run(max_rounds, record_every=1, target_eps=eps))
         t_s = measure_solver_time(trainer, int(H)) if measure else float("nan")
         sweep.points.append(HSweepPoint(int(H), hist.rounds_to(eps), t_s))
+        sweep.comm_bytes_per_round = trainer.comm_bytes_per_round()
     if measure:
         sweep.t_ref_s = measure_solver_time(
-            CoCoATrainer(base_cfg, A, b), n_local)
+            make_trainer(algorithm, base_cfg, A, b), n_local)
     return sweep
 
 
-def time_to_eps(profile: OverheadProfile, point: HSweepPoint,
-                t_ref_s: float) -> float:
+def time_to_eps(model, point: HSweepPoint, t_ref_s: float) -> float:
+    """``model`` is anything with ``round_time(t_solver, t_ref)`` — an
+    :class:`OverheadProfile` (overhead only) or a :class:`TimeModel`
+    (overhead + scheme traffic charged against the measured link)."""
     if point.rounds_to_eps is None:
         return float("inf")
-    return point.rounds_to_eps * profile.round_time(point.t_solver_s, t_ref_s)
+    return point.rounds_to_eps * model.round_time(point.t_solver_s, t_ref_s)
 
 
-def optimal_H(profile: OverheadProfile, sweep: HSweep) -> tuple[int, float]:
-    """(H*, time-to-eps at H*) for one framework profile."""
+def optimal_H(model, sweep: HSweep) -> tuple[int, float]:
+    """(H*, time-to-eps at H*) for one framework profile / time model.
+
+    Raises :class:`NoConvergedPointError` when no grid point reached the
+    sweep's eps (the old ``(None, inf)`` return crashed every caller
+    downstream with a ``TypeError`` on ``None`` arithmetic)."""
     best = (None, float("inf"))
     for p in sweep.points:
-        t = time_to_eps(profile, p, sweep.t_ref_s)
+        t = time_to_eps(model, p, sweep.t_ref_s)
         if t < best[1]:
             best = (p.H, t)
+    if best[0] is None:
+        raise NoConvergedPointError(sweep)
     return best
 
 
-def compute_fraction_at(profile: OverheadProfile, sweep: HSweep, H: int) -> float:
+def compute_fraction_at(model, sweep: HSweep, H: int) -> float:
     for p in sweep.points:
         if p.H == H:
-            return profile.compute_fraction(p.t_solver_s, sweep.t_ref_s)
-    raise KeyError(H)
+            return model.compute_fraction(p.t_solver_s, sweep.t_ref_s)
+    raise KeyError(f"H={H} is not a sweep grid point "
+                   f"(grid: {[p.H for p in sweep.points]})")
 
 
 def autotune_H(rounds_to_eps_fn, round_time_fn, lo: int, hi: int,
                tol: int = 1) -> int:
     """Golden-section search over integer H minimizing
     rounds_to_eps(H) * round_time(H). Both callables may be models or
-    live measurements; used by the beyond-paper auto-adaptive variant."""
+    live measurements; used by the beyond-paper auto-adaptive variant.
+
+    The endpoints ``lo``/``hi`` are evaluated explicitly and the argmin
+    of EVERY evaluated cost is returned: a boundary optimum (common when
+    overhead is tiny, e.g. ``E_mpi``) would otherwise be systematically
+    missed, and a midpoint that beats neither probe can never be
+    returned."""
     phi = (np.sqrt(5) - 1) / 2
+    evaluated: dict[int, float] = {}
 
     def cost(H):
-        r = rounds_to_eps_fn(int(H))
-        return float("inf") if r is None else r * round_time_fn(int(H))
+        H = int(round(H))
+        if H not in evaluated:
+            r = rounds_to_eps_fn(H)
+            evaluated[H] = (float("inf") if r is None
+                            else r * round_time_fn(H))
+        return evaluated[H]
 
+    cost(lo), cost(hi)
     a, b = float(lo), float(hi)
     c, d = b - phi * (b - a), a + phi * (b - a)
     fc, fd = cost(c), cost(d)
@@ -108,4 +227,5 @@ def autotune_H(rounds_to_eps_fn, round_time_fn, lo: int, hi: int,
             a, c, fc = c, d, fd
             d = a + phi * (b - a)
             fd = cost(d)
-    return int(round((a + b) / 2))
+    cost((a + b) / 2)
+    return min(evaluated, key=evaluated.get)

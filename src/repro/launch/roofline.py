@@ -38,8 +38,9 @@ from repro.utils.hlo import parse_collectives  # noqa: E402
 
 
 def _cost_of(built) -> dict:
+    from repro.utils import compat
     compiled = built.lowered.compile()
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     coll = parse_collectives(compiled.as_text())
     mem = compiled.memory_analysis()
     return {

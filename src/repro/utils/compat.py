@@ -31,6 +31,15 @@ def abstract_mesh(axis_shapes, axis_names):
             tuple(zip(axis_names, axis_shapes)))
 
 
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across the return-type change: new
+    jax returns one dict, 0.4.x returns a one-element list of dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca or {}
+
+
 def shard_map(f, mesh, in_specs, out_specs):
     """``jax.shard_map`` with replication checking off, on any jax."""
     if hasattr(jax, "shard_map"):

@@ -133,13 +133,20 @@ def test_smoke_tier_end_to_end(tmp_path):
         assert loaded.timings_s, name
         assert loaded.env.device_count >= 1
     # drivers must cover the full matrix: 3 algorithms x both execution
-    # drivers x all three comm schemes
+    # drivers x all four comm schemes
     got = {(r["algorithm"], r["driver"], r["scheme"])
            for r in by["drivers"].rows}
     assert got == {(a, d, s)
                    for a in ("cocoa", "minibatch_scd", "minibatch_sgd")
                    for d in ("virtual", "sharded")
-                   for s in ("persistent", "spark_faithful", "compressed")}
-    # every cell reports modelled bytes sized to the scheme's dtypes
+                   for s in ("persistent", "spark_faithful", "compressed",
+                             "reduce_scatter")}
+    # every cell reports modelled bytes sized to the scheme's dtypes —
+    # except reduce_scatter on a single-device mesh, whose ring volume
+    # 2*(K-1)/K*len is genuinely zero at K=1
+    k_sh = by["drivers"].params["K_sharded"]
     for r in by["drivers"].rows:
-        assert r["comm_bytes_per_round"] > 0
+        if r["scheme"] == "reduce_scatter" and k_sh == 1:
+            assert r["comm_bytes_per_round"] == 0
+        else:
+            assert r["comm_bytes_per_round"] > 0
