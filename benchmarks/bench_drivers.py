@@ -1,22 +1,26 @@
-"""Driver/comm-scheme coverage: the full 3-algorithm x 4-scheme matrix
-(paper §5.3/§5.4) on the unified distributed-driver layer.
+"""Driver/comm-scheme/exchange-mode coverage: the full 3-algorithm x
+4-scheme x 2-mode matrix (paper §4-§5.4) on the unified
+distributed-driver layer.
 
 Every algorithm (CoCoA, mini-batch SCD, mini-batch SGD) runs under every
 communication scheme (`persistent`, `spark_faithful`, `compressed`,
-`reduce_scatter`) through BOTH execution drivers — the vmap
-virtual-worker path and the shard_map path — with fixed seeds and
-rounds-to-eps asserted within per-algorithm tolerance bands in the smoke
-tier (the CI gate).
+`reduce_scatter`) and every exchange mode (`sync`, `stale` — the
+one-round-delayed apply, the paper's Spark scheduling-delay regime as a
+knob) through BOTH execution drivers — the vmap virtual-worker path and
+the shard_map path — with fixed seeds and rounds-to-eps asserted within
+per-algorithm tolerance bands in the smoke tier (the CI gate).
 
-For each cell the modelled `comm_bytes_per_round` is checked against the
-optimized HLO of the sharded round: for master-centric schemes the
-derived per-round traffic is 2 x K x per-worker collective operand bytes
-(excluding the scalar metric psum); for `reduce_scatter` it is the ring
-volume — (K-1) x the reduce-scatter operand plus K x (K-1) x the
-all-gather operand, i.e. 2*(K-1)/K of the padded vector per worker each
-way. Derived must equal the model exactly, and the `compressed` scheme
-must move int8 tensors. `run_sharded` needs a multi-device mesh —
-`python -m repro.bench.run --smoke` fakes one via
+For each of the 24 (algorithm x scheme x mode) cells the modelled
+`comm_bytes_per_round` is checked against the optimized HLO of the
+sharded round: for master-centric schemes the derived per-round traffic
+is 2 x K x per-worker collective operand bytes (excluding the scalar
+metric psum); for `reduce_scatter` it is the ring volume — (K-1) x the
+reduce-scatter operand plus K x (K-1) x the all-gather operand, i.e.
+2*(K-1)/K of the padded vector per worker each way. Derived must equal
+the model exactly — in BOTH modes: the stale exchange delays the apply
+but still runs the identical collective every round, so staleness may
+never change the bytes on the wire. `run_sharded` needs a multi-device
+mesh — `python -m repro.bench.run --smoke` fakes one via
 ``--xla_force_host_platform_device_count``; when only one device exists
 (e.g. in-process tests) the sharded leg degrades to a K=1 mesh, which
 still exercises the collective code paths but skips the byte checks
@@ -30,21 +34,28 @@ import time
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
 from repro.bench.timing import time_callable
-from repro.core.distributed import COMM_SCHEMES
+from repro.core.distributed import COMM_SCHEMES, EXCHANGE_MODES
 from repro.core.glm import suboptimality
 
 SCHEMES = COMM_SCHEMES
+MODES = EXCHANGE_MODES
 ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
 
 # Fixed-seed rounds-to-eps bands per algorithm (smoke tier: m=96, n=256,
 # K=4, seed 42 data / seed 0 trainer). Measured centers ~15 / ~32 / ~93;
 # bands leave ~3x headroom for jax-version jitter. The `compressed`
-# scheme tolerates 2x extra rounds from int8 quantization error.
+# scheme tolerates 2x extra rounds from int8 quantization error, and
+# `stale` gets 1.5x band headroom for the one-round-delayed apply —
+# measured cost on the smoke problem is within +-2 rounds of sync (the
+# metric honestly lags one round, and CoCoA's conservative sigma=K
+# damping absorbs — here slightly over-relaxes through — the staleness),
+# but the tax grows with conditioning so the band stays loose.
 SMOKE_BANDS = {
     "cocoa": (2, 60),
     "minibatch_scd": (8, 120),
     "minibatch_sgd": (25, 300),
 }
+STALE_BAND_MULT = 1.5
 
 
 # mini-batch SCD's 1/sigma-damped updates shrink per-round progress
@@ -62,7 +73,8 @@ def _eps(algo: str, scheme: str, wl) -> float:
     return eps
 
 
-def _make_trainer(algo: str, wl, tier: str, K: int, scheme: str, seed: int):
+def _make_trainer(algo: str, wl, tier: str, K: int, scheme: str, mode: str,
+                  seed: int):
     from repro.core import (CoCoAConfig, CoCoATrainer, MinibatchSCD,
                             MinibatchSGD, SGDConfig)
 
@@ -71,9 +83,11 @@ def _make_trainer(algo: str, wl, tier: str, K: int, scheme: str, seed: int):
         # the tier-calibrated MLlib-style base step lives on the workload
         return MinibatchSGD(
             SGDConfig(batch_frac=1.0, step_size=wl.sgd_step,
-                      lam=wl.lam, K=K, seed=seed, comm_scheme=scheme), A, b)
+                      lam=wl.lam, K=K, seed=seed, comm_scheme=scheme,
+                      exchange_mode=mode), A, b)
     cfg = CoCoAConfig(K=K, H=common.n_local(wl, K), lam=wl.lam,
-                      solver="scd_ref", comm_scheme=scheme, seed=seed)
+                      solver="scd_ref", comm_scheme=scheme,
+                      exchange_mode=mode, seed=seed)
     cls = MinibatchSCD if algo == "minibatch_scd" else CoCoATrainer
     return cls(cfg, A, b)
 
@@ -155,7 +169,8 @@ def _hlo_traffic(tr, round_fn):
 
 
 @benchmark("drivers", figures="§5.3-5.4",
-           description="3 algorithms x 4 comm schemes, virtual + sharded")
+           description="3 algorithms x 4 comm schemes x 2 exchange modes, "
+                       "virtual + sharded")
 def run(ctx: BenchContext) -> dict:
     import jax
 
@@ -168,61 +183,71 @@ def run(ctx: BenchContext) -> dict:
     for algo in ALGORITHMS:
         lo, hi = SMOKE_BANDS[algo]
         for scheme in SCHEMES:
-            eps = _eps(algo, scheme, wl)
-            # compressed tolerates extra rounds from int8 quantization
-            band_hi = 2 * hi if scheme == "compressed" else hi
-            tr_v = _make_trainer(algo, wl, ctx.tier, wl.K, scheme, ctx.seed)
-            r_v, t_v, s_v = _run_virtual(tr_v, wl, eps)
-            tr_s = _make_trainer(algo, wl, ctx.tier, K_sh, scheme, ctx.seed)
-            round_fn = tr_s.build_sharded_round(mesh)  # one compile per cell
-            r_s, t_s, s_s = _run_sharded(tr_s, wl, eps, round_fn)
-            modelled = tr_s.comm_bytes_per_round()
-            derived, int8 = (_hlo_traffic(tr_s, round_fn) if K_sh >= 2
-                             else (None, None))
-            for driver, r2e, t_round, sub in (("virtual", r_v, t_v, s_v),
-                                              ("sharded", r_s, t_s, s_s)):
-                cell = f"{algo}_{driver}_{scheme}"
-                rows.append({"algorithm": algo, "driver": driver,
-                             "scheme": scheme, "rounds_to_eps": r2e,
-                             "t_round_s": round(t_round, 6),
-                             "final_subopt": f"{sub:.2e}",
-                             "comm_bytes_per_round": modelled,
-                             "hlo_bytes_per_round": derived})
-                timings[f"{cell}_round"] = t_round
-                counters[f"rounds_to_eps_{cell}"] = (
-                    r2e if r2e is not None else -1)
-                # bands are calibrated at K = wl.K; a device-starved
-                # sharded leg (K_sh < wl.K) converges differently
-                if ctx.tier == "smoke" and (driver == "virtual"
-                                            or K_sh == wl.K):
-                    assert r2e is not None, (
-                        f"{cell} did not reach eps={eps} in "
-                        f"{wl.max_rounds} rounds (final subopt {sub:.2e})")
-                    assert lo <= r2e <= band_hi, (
-                        f"{cell} rounds_to_eps={r2e} outside the "
-                        f"calibrated band [{lo}, {band_hi}]")
-            # the modelled bytes depend on the sharded worker count, so
-            # a device-starved run (K_sh < wl.K) must not emit counters
-            # that would pair with — and exactly mismatch — a full-mesh
-            # baseline under `compare --exact-counter`
-            suffix = "" if K_sh == wl.K else f"_K{K_sh}"
-            counters[f"comm_bytes_per_round_{algo}_{scheme}{suffix}"] = \
-                modelled
-            if derived is not None:
-                counters[f"hlo_bytes_per_round_{algo}_{scheme}{suffix}"] = \
-                    derived
-                assert modelled == derived, (
-                    f"{algo}/{scheme}: modelled comm_bytes_per_round "
-                    f"{modelled} != {derived} derived from the HLO "
-                    f"collectives (K={K_sh})")
-                assert int8 == (scheme == "compressed"), (
-                    f"{algo}/{scheme}: int8 collective presence {int8} "
-                    f"does not match the scheme")
-            notes.append(f"{algo}/{scheme}: virtual {r_v}, sharded "
-                         f"(K={K_sh}) {r_s} rounds to eps={eps}; "
-                         f"{modelled} modelled bytes/round"
-                         + (f" == {derived} from HLO" if derived is not None
-                            else ""))
+            for mode in MODES:
+                eps = _eps(algo, scheme, wl)
+                # compressed tolerates extra rounds from int8
+                # quantization, stale from the one-round-delayed apply
+                band_hi = 2 * hi if scheme == "compressed" else hi
+                if mode == "stale":
+                    band_hi = int(STALE_BAND_MULT * band_hi)
+                mode_sfx = "" if mode == "sync" else f"_{mode}"
+                tr_v = _make_trainer(algo, wl, ctx.tier, wl.K, scheme, mode,
+                                     ctx.seed)
+                r_v, t_v, s_v = _run_virtual(tr_v, wl, eps)
+                tr_s = _make_trainer(algo, wl, ctx.tier, K_sh, scheme, mode,
+                                     ctx.seed)
+                round_fn = tr_s.build_sharded_round(mesh)  # 1 compile/cell
+                r_s, t_s, s_s = _run_sharded(tr_s, wl, eps, round_fn)
+                modelled = tr_s.comm_bytes_per_round()
+                derived, int8 = (_hlo_traffic(tr_s, round_fn) if K_sh >= 2
+                                 else (None, None))
+                for driver, r2e, t_round, sub in (
+                        ("virtual", r_v, t_v, s_v),
+                        ("sharded", r_s, t_s, s_s)):
+                    cell = f"{algo}_{driver}_{scheme}{mode_sfx}"
+                    rows.append({"algorithm": algo, "driver": driver,
+                                 "scheme": scheme, "mode": mode,
+                                 "rounds_to_eps": r2e,
+                                 "t_round_s": round(t_round, 6),
+                                 "final_subopt": f"{sub:.2e}",
+                                 "comm_bytes_per_round": modelled,
+                                 "hlo_bytes_per_round": derived})
+                    timings[f"{cell}_round"] = t_round
+                    counters[f"rounds_to_eps_{cell}"] = (
+                        r2e if r2e is not None else -1)
+                    # bands are calibrated at K = wl.K; a device-starved
+                    # sharded leg (K_sh < wl.K) converges differently
+                    if ctx.tier == "smoke" and (driver == "virtual"
+                                                or K_sh == wl.K):
+                        assert r2e is not None, (
+                            f"{cell} did not reach eps={eps} in "
+                            f"{wl.max_rounds} rounds (final subopt "
+                            f"{sub:.2e})")
+                        assert lo <= r2e <= band_hi, (
+                            f"{cell} rounds_to_eps={r2e} outside the "
+                            f"calibrated band [{lo}, {band_hi}]")
+                # the modelled bytes depend on the sharded worker count,
+                # so a device-starved run (K_sh < wl.K) must not emit
+                # counters that would pair with — and exactly mismatch —
+                # a full-mesh baseline under `compare --exact-counter`
+                suffix = "" if K_sh == wl.K else f"_K{K_sh}"
+                counters[f"comm_bytes_per_round_{algo}_{scheme}"
+                         f"{mode_sfx}{suffix}"] = modelled
+                if derived is not None:
+                    counters[f"hlo_bytes_per_round_{algo}_{scheme}"
+                             f"{mode_sfx}{suffix}"] = derived
+                    assert modelled == derived, (
+                        f"{algo}/{scheme}/{mode}: modelled "
+                        f"comm_bytes_per_round {modelled} != {derived} "
+                        f"derived from the HLO collectives (K={K_sh})")
+                    assert int8 == (scheme == "compressed"), (
+                        f"{algo}/{scheme}/{mode}: int8 collective "
+                        f"presence {int8} does not match the scheme")
+                notes.append(f"{algo}/{scheme}/{mode}: virtual {r_v}, "
+                             f"sharded (K={K_sh}) {r_s} rounds to "
+                             f"eps={eps}; {modelled} modelled bytes/round"
+                             + (f" == {derived} from HLO"
+                                if derived is not None else ""))
     if K_sh < wl.K:
         notes.append(f"only {K_sh} device(s) — run via `python -m "
                      f"repro.bench.run --smoke` to fake {wl.K} CPU devices"
@@ -230,7 +255,8 @@ def run(ctx: BenchContext) -> dict:
     return {"params": {"m": wl.m, "n": wl.n, "K_virtual": wl.K,
                        "K_sharded": K_sh, "eps": wl.eps,
                        "algorithms": list(ALGORITHMS),
-                       "schemes": list(SCHEMES)},
+                       "schemes": list(SCHEMES),
+                       "modes": list(MODES)},
             "timings_s": timings, "counters": counters,
             "rows": rows, "notes": notes}
 

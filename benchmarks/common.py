@@ -137,16 +137,18 @@ def trainer(wl: Workload, H: int, solver: str = "scd_kernel",
 
 def bench_trainer(wl: Workload, algorithm: str, H: int,
                   solver: str = "scd_kernel", K_: int | None = None,
-                  seed: int = 0, scheme: str = "persistent"):
+                  seed: int = 0, scheme: str = "persistent",
+                  mode: str = "sync"):
     """Any of the three driver-layer algorithms on the tier workload."""
     A, b, _ = problem(wl)
     K_ = K_ or wl.K
     if algorithm == "minibatch_sgd":
         cfg = SGDConfig(batch_frac=1.0, step_size=wl.sgd_step, lam=wl.lam,
-                        K=K_, H=H, seed=seed, comm_scheme=scheme)
+                        K=K_, H=H, seed=seed, comm_scheme=scheme,
+                        exchange_mode=mode)
     else:
         cfg = CoCoAConfig(K=K_, H=H, lam=wl.lam, eta=1.0, solver=solver,
-                          comm_scheme=scheme, seed=seed)
+                          comm_scheme=scheme, seed=seed, exchange_mode=mode)
     return make_trainer(algorithm, cfg, A, b)
 
 
@@ -158,41 +160,46 @@ def sweep_eps(wl: Workload, algorithm: str) -> float:
 
 def run_sweep(wl: Workload, K_: int | None = None,
               solver: str = "scd_kernel", algorithm: str = "cocoa",
-              scheme: str = "persistent") -> HSweep:
+              scheme: str = "persistent", mode: str = "sync") -> HSweep:
     """Measured rounds-to-eps + solver wall time per H (paper Fig 6 raw)
-    for any algorithm x comm scheme on the driver layer, cached per
-    (tier workload, K, solver, algorithm, scheme).
+    for any algorithm x comm scheme x exchange mode on the driver layer,
+    cached per (tier workload, K, solver, algorithm, scheme, mode).
 
     The K virtual workers execute SERIALLY on this host, so the measured
     per-round solver time is divided by K to model the real cluster where
     workers run concurrently (the paper's setting).
 
     Exact-sum schemes (persistent / spark_faithful / reduce_scatter)
-    share one measured trajectory — the virtual driver reduces all of
-    them with the same f32 sum, so only the modelled traffic differs;
-    ``compressed`` really is re-run (int8 error changes the trajectory).
+    share one measured trajectory *within a mode* — the virtual driver
+    reduces all of them with the same f32 sum, so only the modelled
+    traffic differs; ``compressed`` really is re-run (int8 error changes
+    the trajectory), and so is each exchange mode (the delayed apply
+    changes the trajectory for every scheme).
     """
     K_ = K_ or wl.K
-    key = (wl, K_, solver, algorithm, scheme)
+    key = (wl, K_, solver, algorithm, scheme, mode)
     if key in _SWEEPS:
         return _SWEEPS[key]
     if scheme in EXACT_SUM_SCHEMES and scheme != "persistent":
-        base = run_sweep(wl, K_, solver, algorithm, "persistent")
+        base = run_sweep(wl, K_, solver, algorithm, "persistent", mode)
         sweep = HSweep(
             eps=base.eps, n_local=base.n_local, t_ref_s=base.t_ref_s,
             points=list(base.points), algorithm=algorithm, scheme=scheme,
+            mode=mode,
             comm_bytes_per_round=bench_trainer(
                 wl, algorithm, base.n_local, solver, K_,
-                scheme=scheme).comm_bytes_per_round())
+                scheme=scheme, mode=mode).comm_bytes_per_round())
         _SWEEPS[key] = sweep
         return sweep
     nl = n_local(wl, K_)
     eps = sweep_eps(wl, algorithm)
     grid = (wl.sgd_h_grid if algorithm == "minibatch_sgd"
             else h_grid(wl, K_))
-    sweep = HSweep(eps=eps, n_local=nl, algorithm=algorithm, scheme=scheme)
+    sweep = HSweep(eps=eps, n_local=nl, algorithm=algorithm, scheme=scheme,
+                   mode=mode)
     for H in grid:
-        tr = bench_trainer(wl, algorithm, H, solver, K_, scheme=scheme)
+        tr = bench_trainer(wl, algorithm, H, solver, K_, scheme=scheme,
+                           mode=mode)
         hist = (tr.run_workers(wl.max_rounds, record_every=1, target_eps=eps)
                 if algorithm == "minibatch_sgd"
                 else tr.run(wl.max_rounds, record_every=1, target_eps=eps))
@@ -200,7 +207,8 @@ def run_sweep(wl: Workload, K_: int | None = None,
         sweep.points.append(HSweepPoint(H, hist.rounds_to(eps), t_s))
         sweep.comm_bytes_per_round = tr.comm_bytes_per_round()
     sweep.t_ref_s = measure_solver_time(
-        bench_trainer(wl, algorithm, nl, solver, K_, scheme=scheme), nl,
+        bench_trainer(wl, algorithm, nl, solver, K_, scheme=scheme,
+                      mode=mode), nl,
         reps=wl.reps) / K_
     _SWEEPS[key] = sweep
     return sweep

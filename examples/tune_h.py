@@ -8,14 +8,30 @@ MEASURED through the bench harness's timing discipline
 then checks the tuned H against the exhaustive grid, for two very
 different "systems" (MPI-like and pySpark-like).
 
+``--mode stale`` runs the one-round-delayed apply (the staleness knob):
+rounds-to-eps is measured on the actual stale trajectories and the time
+model hides ``min(t_comm, t_compute)`` per round, so the tuner sees both
+the convergence tax and the overlap payoff.
+
   PYTHONPATH=src python examples/tune_h.py
+  PYTHONPATH=src python examples/tune_h.py --mode stale --bandwidth 1e8
 """
+import argparse
 import functools
 
-from repro.bench.timing import measure_solver_time
+from repro.bench.timing import measure_solver_time, synthetic_link
 from repro.core import CoCoAConfig, CoCoATrainer, PROFILES
-from repro.core.tradeoff import autotune_H
+from repro.core.tradeoff import TimeModel, autotune_H
 from repro.data import make_glm_data
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--mode", choices=("sync", "stale"), default="sync",
+                help="exchange mode: sync (bulk-synchronous) or stale "
+                     "(one-round-delayed apply)")
+ap.add_argument("--bandwidth", type=float, default=1e9,
+                help="synthetic link bandwidth in B/s for the comm term "
+                     "(default 1 GB/s)")
+args = ap.parse_args()
 
 A, b, _ = make_glm_data(m=256, n=768, density=0.2, seed=4)
 EPS = 1e-3
@@ -24,32 +40,39 @@ H_REF = 96
 # Measure the solver-cost slope once (seconds per local SCD step) at the
 # reference point; the model extrapolates linearly in H, which is exact
 # for this solver (H sequential coordinate steps).
-_tr = CoCoATrainer(CoCoAConfig(K=8, H=H_REF, seed=0), A, b)
+_tr = CoCoATrainer(CoCoAConfig(K=8, H=H_REF, seed=0,
+                               exchange_mode=args.mode), A, b)
 T_PER_STEP = measure_solver_time(_tr, H_REF, reps=3) / H_REF
 T_REF = T_PER_STEP * H_REF
+COMM_BYTES = _tr.comm_bytes_per_round()
+LINK = synthetic_link(args.bandwidth, 1e-4)
 print(f"measured solver cost: {T_PER_STEP * 1e6:.2f} us/step "
-      f"(t_ref={T_REF * 1e3:.2f} ms at H={H_REF})")
+      f"(t_ref={T_REF * 1e3:.2f} ms at H={H_REF}); mode={args.mode}, "
+      f"{COMM_BYTES} B/round over a "
+      f"{args.bandwidth / 1e9:.2f} GB/s link")
 
 
 @functools.lru_cache(maxsize=64)
 def rounds_to_eps(H: int):
-    tr = CoCoATrainer(CoCoAConfig(K=8, H=H, seed=0), A, b)
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=H, seed=0,
+                                  exchange_mode=args.mode), A, b)
     return tr.run(800, record_every=1, target_eps=EPS).rounds_to(EPS)
 
 
-def round_time_model(profile, H):
-    return profile.round_time(T_PER_STEP * H, t_ref_s=T_REF)
+def round_time_model(model, H):
+    return model.round_time(T_PER_STEP * H, t_ref_s=T_REF)
 
 
 for name in ("E_mpi", "D_pyspark_c"):
-    p = PROFILES[name]
+    model = TimeModel(PROFILES[name], COMM_BYTES, LINK, mode=args.mode)
     h_star = autotune_H(rounds_to_eps,
-                        functools.partial(round_time_model, p), 4, 4096)
+                        functools.partial(round_time_model, model), 4, 4096)
     grid = [8, 32, 96, 384, 1536, 4096]
-    costs = {H: (rounds_to_eps(H) or 10**9) * round_time_model(p, H)
+    costs = {H: (rounds_to_eps(H) or 10**9) * round_time_model(model, H)
              for H in grid}
     h_grid = min(costs, key=costs.get)
-    cost_star = (rounds_to_eps(h_star) or 10**9) * round_time_model(p, h_star)
+    cost_star = ((rounds_to_eps(h_star) or 10**9)
+                 * round_time_model(model, h_star))
     print(f"{name:14s} autotuned H = {h_star:5d} "
           f"(cost {cost_star:7.2f}s) vs grid best H = {h_grid:5d} "
           f"(cost {costs[h_grid]:7.2f}s)")

@@ -22,7 +22,9 @@ from contextlib import contextmanager
 from repro.bench import registry, schema
 
 # Per-benchmark wall-clock budget (seconds) by tier; --timeout overrides.
-DEFAULT_TIMEOUT_S = {"smoke": 90.0, "quick": 600.0, "full": 3600.0}
+# The smoke budget is sized to the drivers benchmark's 24-cell
+# (algorithm x scheme x mode) matrix — ~60s locally, with CI headroom.
+DEFAULT_TIMEOUT_S = {"smoke": 180.0, "quick": 600.0, "full": 3600.0}
 
 
 class BenchTimeout(Exception):

@@ -91,8 +91,14 @@ class LinkCalibration:
         if self.latency_s < 0:
             raise ValueError(f"latency must be >= 0, got {self.latency_s!r}")
 
-    def seconds_for(self, nbytes: float) -> float:
-        return self.latency_s + nbytes / self.bandwidth_Bps
+    def seconds_for(self, nbytes: float, overlap_s: float = 0.0) -> float:
+        """Wall seconds the transfer costs the round. ``overlap_s`` is
+        compute time the exchange may hide behind (the ``stale``
+        exchange mode's one-round-delayed apply): the hidden portion is
+        ``min(t_wire, overlap_s)``, so a fully-hidden transfer costs 0
+        and a partially-hidden one costs only the overhang."""
+        t = self.latency_s + nbytes / self.bandwidth_Bps
+        return t - min(t, max(overlap_s, 0.0))
 
     def scaled(self, bandwidth_mult: float) -> "LinkCalibration":
         """A synthetic what-if link with scaled bandwidth (e.g. 0.01 for

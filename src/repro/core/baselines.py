@@ -56,9 +56,11 @@ class SGDConfig:
     H: int = 1                       # local SGD steps per round (H=1: MLlib)
     seed: int = 0
     comm_scheme: str = "persistent"  # one of distributed.COMM_SCHEMES
+    exchange_mode: str = "sync"      # one of distributed.EXCHANGE_MODES
 
     def __post_init__(self):
         dist.get_scheme(self.comm_scheme)  # fail loudly on typos
+        dist.get_mode(self.exchange_mode)
         if self.H < 1:
             raise ValueError(f"H must be >= 1, got {self.H}")
 
@@ -147,6 +149,7 @@ class MinibatchSGD:
         self.m, self.n = A.shape
         self.problem = GLMProblem(lam=cfg.lam, eta=cfg.eta)
         self.scheme = dist.get_scheme(cfg.comm_scheme)
+        self.mode = dist.get_mode(cfg.exchange_mode)
         self.batch = max(1, int(cfg.batch_frac * self.m))
         self._step = self._build_step()
         self.m_local = -(-self.m // cfg.K)
@@ -170,7 +173,7 @@ class MinibatchSGD:
                     jnp.asarray(b_pad.reshape(cfg.K, m_local)))
             algo = _SGDRound(cfg, self.problem, m_local, self.batch_local)
             round_fn = dist.build_virtual_round(algo, self.scheme, data,
-                                                K=cfg.K)
+                                                K=cfg.K, mode=self.mode)
             self._dist_state = (data, algo, round_fn)
         return self._dist_state
 
@@ -200,10 +203,11 @@ class MinibatchSGD:
 
     def init_state(self):
         """(local, shared) for the distributed drivers: SGD keeps no
-        per-worker persistent state, so ``local`` is an empty block."""
+        per-worker persistent state, so ``local`` is an empty block.
+        Stale mode widens the shared slot to (alpha, pending gradient)."""
         local = jnp.zeros((self.cfg.K, 0), jnp.float32)
         alpha = jnp.zeros(self.n, jnp.float32)
-        return local, alpha
+        return local, dist.init_exchange_state(self.mode, alpha)
 
     def with_H(self, H: int) -> "MinibatchSGD":
         """Fresh trainer with the local-update count moved (the H-sweep
@@ -244,6 +248,14 @@ class MinibatchSGD:
     def run(self, rounds: int, p_star: float | None = None,
             p_zero: float | None = None, record_every: int = 10,
             target_eps: float | None = None) -> History:
+        if self.mode.stale:
+            # the legacy single-device loop has no exchange to delay;
+            # silently running it synchronously would mislabel the
+            # trajectory (the knob must fail loudly, like a typo'd
+            # scheme would)
+            raise ValueError(
+                "exchange_mode='stale' has no meaning for the legacy "
+                "single-device run(); use run_workers() or run_sharded()")
         p_star = self.p_star if p_star is None else p_star
         p_zero = self.p_zero if p_zero is None else p_zero
         alpha = jnp.zeros(self.n, jnp.float32)
@@ -271,7 +283,9 @@ class MinibatchSGD:
         key = jax.random.key(self.cfg.seed)
         hist = History(p_star=self.p_star if p_star is None else p_star,
                        p_zero=self.p_zero if p_zero is None else p_zero)
+        last_t = 0
         for t in range(1, rounds + 1):
+            last_t = t
             key, sub = jax.random.split(key)
             local, alpha, primal = round_fn(local, alpha, sub, t)
             if t % record_every == 0 or t == rounds:
@@ -282,6 +296,9 @@ class MinibatchSGD:
                 hist.subopt.append(s)
                 if target_eps is not None and s <= target_eps:
                     break
+        # stale runs carry one unapplied aggregate; absorb it so the
+        # final iterate reflects every round that was computed
+        alpha = dist.finish_run(round_fn, alpha, last_t)
         self.alpha_final = np.asarray(alpha)
         return hist
 
@@ -301,7 +318,7 @@ class MinibatchSGD:
         ``round_fn(local, alpha, key, t)``."""
         assert mesh.devices.size == self.cfg.K, (mesh.devices.size, self.cfg.K)
         return dist.build_sharded_round(self._algo, self.scheme, self._data,
-                                        mesh)
+                                        mesh, mode=self.mode)
 
     def run_sharded(self, rounds: int, mesh: Mesh | None = None,
                     record_every: int = 10,

@@ -28,6 +28,13 @@ see ``distributed.CommScheme`` for the mechanics and byte accounting):
     ``psum_scatter`` + ``all_gather`` ring pair: 2*(K-1)/K of the
     vector per worker each way, the cheapest exact f32 exchange.
 
+Orthogonal to the scheme, ``exchange_mode`` picks the staleness regime
+(``distributed.ExchangeMode``): ``sync`` applies the round's aggregate
+immediately; ``stale`` applies it one round late (workers compute
+against the unapplied residual — the paper's §4-§5 Spark
+scheduling-delay regime as an explicit knob), with the final pending
+Delta v flushed after the last round so nothing is dropped.
+
 Mini-batch SCD (the paper's §2.1 baseline) runs the same drivers with
 the fixed-residual solver — see ``repro.core.baselines.MinibatchSCD``.
 """
@@ -58,13 +65,15 @@ class CoCoAConfig:
     sigma: float | None = None       # subproblem safety; default K ("adding")
     solver: str = "scd_ref"          # scd_ref | scd_kernel | scd_fixed
     comm_scheme: str = "persistent"  # one of distributed.COMM_SCHEMES
+    exchange_mode: str = "sync"      # one of distributed.EXCHANGE_MODES
     partitioner: str = "balanced"    # balanced | block
     seed: int = 0
 
     def __post_init__(self):
-        # a typo'd scheme must fail loudly, not silently fall through to
-        # persistent behavior
+        # a typo'd scheme or mode must fail loudly, not silently fall
+        # through to persistent/synchronous behavior
         dist.get_scheme(self.comm_scheme)
+        dist.get_mode(self.exchange_mode)
         if self.partitioner not in ("balanced", "block"):
             raise ValueError(f"unknown partitioner {self.partitioner!r}; "
                              f"known: ('balanced', 'block')")
@@ -150,6 +159,7 @@ class CoCoATrainer:
         self.cfg = cfg
         self.problem = GLMProblem(lam=cfg.lam, eta=cfg.eta)
         self.scheme = dist.get_scheme(cfg.comm_scheme)
+        self.mode = dist.get_mode(cfg.exchange_mode)
         self.A_np, self.b_np = np.asarray(A, np.float32), np.asarray(b, np.float32)
         m, n = A.shape
         self.m, self.n = m, n
@@ -168,7 +178,8 @@ class CoCoATrainer:
         self._data = (self.A_st, self.col_sq, self.mask)
         self._round_fn = dist.build_virtual_round(
             self._algo, self.scheme, self._data, K=cfg.K,
-            use_map=(cfg.solver == "scd_kernel"))  # pallas interpret: no vmap
+            use_map=(cfg.solver == "scd_kernel"),  # pallas interpret: no vmap
+            mode=self.mode)
         self._p_star_cache: float | None = None
 
     @property
@@ -184,7 +195,8 @@ class CoCoATrainer:
     def init_state(self):
         alpha = jnp.zeros((self.cfg.K, self.part.n_padded), jnp.float32)
         w = -self.b  # w = A @ 0 - b
-        return alpha, w
+        # stale mode widens the shared slot to (w, pending Delta v)
+        return alpha, dist.init_exchange_state(self.mode, w)
 
     def with_H(self, H: int) -> "CoCoATrainer":
         """A fresh trainer on the same problem with the H knob moved —
@@ -204,49 +216,16 @@ class CoCoATrainer:
             local_state_len=self.cfg.K * self.part.n_padded)
 
     # ------------------------------------------------------------------
-    # virtual-worker (vmap) driver
+    # the one record loop both drivers share
     # ------------------------------------------------------------------
-    def run(self, rounds: int, record_every: int = 1,
-            target_eps: float | None = None) -> History:
-        alpha, w = self.init_state()
+    def _record_loop(self, round_fn, alpha, w, rounds: int,
+                     record_every: int,
+                     target_eps: float | None) -> History:
         key = jax.random.key(self.cfg.seed)
         hist = History(p_star=self.p_star, p_zero=self.p_zero)
+        last_t = 0
         for t in range(rounds):
-            key, sub = jax.random.split(key)
-            alpha, w, primal = self._round_fn(alpha, w, sub, t + 1)
-            if (t + 1) % record_every == 0 or t == rounds - 1:
-                p = float(primal)
-                s = suboptimality(p, hist.p_star, hist.p_zero)
-                hist.rounds.append(t + 1)
-                hist.primal.append(p)
-                hist.subopt.append(s)
-                if target_eps is not None and s <= target_eps:
-                    break
-        self.alpha_final = part_mod.unpack_alpha(np.asarray(alpha), self.part, self.n)
-        return hist
-
-    # ------------------------------------------------------------------
-    # shard_map driver (real distribution over devices)
-    # ------------------------------------------------------------------
-    def build_sharded_round(self, mesh: Mesh):
-        """Distributed round via the generic shard_map driver; K must
-        equal the mesh axis size. Returns jitted
-        ``round_fn(alpha_st, w, key, t)``."""
-        assert mesh.devices.size == self.cfg.K, (mesh.devices.size, self.cfg.K)
-        return dist.build_sharded_round(self._algo, self.scheme, self._data,
-                                        mesh)
-
-    def run_sharded(self, rounds: int, mesh: Mesh | None = None,
-                    record_every: int = 1,
-                    target_eps: float | None = None) -> History:
-        cfg = self.cfg
-        if mesh is None:
-            mesh = compat.make_mesh((cfg.K,), ("workers",))
-        round_fn = self.build_sharded_round(mesh)
-        alpha, w = dist.place_state(mesh, *self.init_state())
-        key = jax.random.key(cfg.seed)
-        hist = History(p_star=self.p_star, p_zero=self.p_zero)
-        for t in range(rounds):
+            last_t = t + 1
             key, sub = jax.random.split(key)
             alpha, w, primal = round_fn(alpha, w, sub, t + 1)
             if (t + 1) % record_every == 0 or t == rounds - 1:
@@ -257,8 +236,43 @@ class CoCoATrainer:
                 hist.subopt.append(s)
                 if target_eps is not None and s <= target_eps:
                     break
-        self.alpha_final = part_mod.unpack_alpha(np.asarray(alpha), self.part, self.n)
+        # stale runs carry one unapplied aggregate; absorb it so the
+        # final iterate reflects every round that was computed
+        w = dist.finish_run(round_fn, w, last_t)
+        self.w_final = np.asarray(w)
+        self.alpha_final = part_mod.unpack_alpha(np.asarray(alpha),
+                                                 self.part, self.n)
         return hist
+
+    # ------------------------------------------------------------------
+    # virtual-worker (vmap) driver
+    # ------------------------------------------------------------------
+    def run(self, rounds: int, record_every: int = 1,
+            target_eps: float | None = None) -> History:
+        alpha, w = self.init_state()
+        return self._record_loop(self._round_fn, alpha, w, rounds,
+                                 record_every, target_eps)
+
+    # ------------------------------------------------------------------
+    # shard_map driver (real distribution over devices)
+    # ------------------------------------------------------------------
+    def build_sharded_round(self, mesh: Mesh):
+        """Distributed round via the generic shard_map driver; K must
+        equal the mesh axis size. Returns jitted
+        ``round_fn(alpha_st, w, key, t)``."""
+        assert mesh.devices.size == self.cfg.K, (mesh.devices.size, self.cfg.K)
+        return dist.build_sharded_round(self._algo, self.scheme, self._data,
+                                        mesh, mode=self.mode)
+
+    def run_sharded(self, rounds: int, mesh: Mesh | None = None,
+                    record_every: int = 1,
+                    target_eps: float | None = None) -> History:
+        if mesh is None:
+            mesh = compat.make_mesh((self.cfg.K,), ("workers",))
+        round_fn = self.build_sharded_round(mesh)
+        alpha, w = dist.place_state(mesh, *self.init_state())
+        return self._record_loop(round_fn, alpha, w, rounds, record_every,
+                                 target_eps)
 
     # ------------------------------------------------------------------
     def objective_of(self, alpha_global: np.ndarray) -> float:

@@ -31,6 +31,23 @@ substrate, so this module factors it out:
     call it, so they cannot drift) and byte accounting sized to what the
     collectives actually move (int8 for ``compressed``, f32 otherwise).
 
+  * :class:`ExchangeMode` — the *staleness* axis, orthogonal to the
+    scheme (paper §4-§5: Spark's scheduling delay makes workers compute
+    against stale state; treating that delay as an algorithmic knob is
+    the other half of the computation/communication trade-off):
+
+      - ``sync``   bulk-synchronous: the round-``t`` aggregate is
+        applied before round ``t+1`` computes (every scheme above, as
+        in the paper's optimized implementations).
+      - ``stale``  one-round-delayed apply: workers compute round ``t``
+        against shared state that has only absorbed aggregates through
+        round ``t-2``; the round-``t-1`` aggregate is carried as
+        explicit *pending* state and applied while round ``t`` computes.
+        The collective still runs every round (same wire bytes, same
+        HLO traffic), but nothing waits on it — the exchange can hide
+        behind the next round's compute, which is exactly the overlap
+        the trade-off layer's ``TimeModel`` charges for.
+
   * generic round drivers over the ``workers`` mesh axis — a *virtual*
     driver (vmap/lax.map over stacked ``(K, ...)`` worker arrays on
     however many real devices exist) and a *sharded* driver (real
@@ -40,8 +57,15 @@ substrate, so this module factors it out:
     communication mechanics.
 
 Per-worker RNG is derived identically in both drivers (``split`` of the
-round key into K worker keys), so a virtual and a sharded run with the
-same seed follow the same trajectory up to reduction-order float jitter.
+round key into K worker keys) and is untouched by the exchange mode, so
+a virtual and a sharded run with the same seed follow the same
+trajectory up to reduction-order float jitter — in either mode.
+
+Under ``stale`` the drivers' ``shared`` slot widens to the pair
+``(shared, pending)`` (build it with :func:`init_exchange_state`); a
+finished run flushes the last pending aggregate with ``round_fn.flush``
+so a 1-round stale run produces the same iterate as a sync run (the
+delayed apply is a pipeline shift, not a lost update).
 """
 from __future__ import annotations
 
@@ -58,6 +82,7 @@ from repro.utils import compat
 
 COMM_SCHEMES = ("persistent", "spark_faithful", "compressed",
                 "reduce_scatter")
+EXCHANGE_MODES = ("sync", "stale")
 
 FP_ITEMSIZE = 4        # every dense array in the system is float32
 INT8_ITEMSIZE = 1
@@ -187,6 +212,85 @@ def get_scheme(name: str) -> CommScheme:
 
 
 # ---------------------------------------------------------------------------
+# exchange modes (the staleness axis, orthogonal to the comm scheme)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ExchangeMode:
+    """``sync`` (bulk-synchronous apply) or ``stale`` (one-round-delayed
+    apply: the aggregate computed in round ``t`` is applied during round
+    ``t+1`` while workers compute against the unapplied state — the
+    paper's Spark scheduling-delay regime as an explicit knob)."""
+    name: str
+
+    def __post_init__(self):
+        if self.name not in EXCHANGE_MODES:
+            raise ValueError(f"unknown exchange mode {self.name!r}; "
+                             f"known: {EXCHANGE_MODES}")
+
+    @property
+    def stale(self) -> bool:
+        return self.name == "stale"
+
+
+def get_mode(mode: "ExchangeMode | str") -> ExchangeMode:
+    """Validated mode lookup (raises on typos instead of silently
+    running bulk-synchronous rounds)."""
+    return mode if isinstance(mode, ExchangeMode) else ExchangeMode(mode)
+
+
+def init_exchange_state(mode: "ExchangeMode | str", shared,
+                        pending=None):
+    """The drivers' ``shared`` slot for the given mode: ``sync`` passes
+    the shared state through untouched; ``stale`` pairs it with the
+    carried pending aggregate (zeros until round 1 has aggregated —
+    every algorithm here all-reduces an update shaped like its shared
+    state, so ``zeros_like(shared)`` is the default template)."""
+    if not get_mode(mode).stale:
+        return shared
+    if pending is None:
+        pending = jax.tree_util.tree_map(jnp.zeros_like, shared)
+    return (shared, pending)
+
+
+def _delayed_apply(algo: "RoundAlgorithm", shared, pending, t):
+    """Apply the round-``t-1`` pending aggregate under its own round
+    index. Round 1 has no real pending aggregate (only the zero init),
+    and an algorithm's ``apply_update`` need not be the identity on a
+    zero update (e.g. SGD's proximal step still moves), so the round-1
+    apply is masked out rather than trusted to be a no-op."""
+    applied = algo.apply_update(shared, pending, jnp.maximum(t - 1, 1))
+    return jax.tree_util.tree_map(
+        lambda a, s: jnp.where(t <= 1, s, a), applied, shared)
+
+
+def _make_flush(algo: "RoundAlgorithm", mode: ExchangeMode) -> Callable:
+    """``flush(shared_state, t) -> shared``: absorb the pending
+    aggregate left over from the last executed round ``t`` (identity in
+    sync mode). Without the flush a 1-round stale run would silently
+    drop its only update — the off-by-one the single-round
+    sync-vs-stale regression test pins."""
+    if not mode.stale:
+        return lambda shared, t: shared
+
+    @jax.jit
+    def flush(shared_state, t):
+        shared, pending = shared_state
+        return algo.apply_update(shared, pending, t)
+
+    return flush
+
+
+def finish_run(round_fn: Callable, shared, last_t: int):
+    """The one post-run epilogue every trainer loop shares: absorb the
+    pending aggregate from the last executed round (``last_t`` is its
+    1-based index; 0 means no round ran, so there is nothing pending
+    and the bare shared state is unwrapped as-is)."""
+    if last_t > 0:
+        return round_fn.flush(shared, last_t)
+    return shared[0] if round_fn.mode.stale else shared
+
+
+# ---------------------------------------------------------------------------
 # the algorithm protocol
 # ---------------------------------------------------------------------------
 class RoundAlgorithm(Protocol):
@@ -224,16 +328,26 @@ class RoundAlgorithm(Protocol):
 # generic round drivers
 # ---------------------------------------------------------------------------
 def build_virtual_round(algo: RoundAlgorithm, scheme: CommScheme, data,
-                        *, K: int, use_map: bool = False) -> Callable:
+                        *, K: int, use_map: bool = False,
+                        mode: "ExchangeMode | str" = "sync") -> Callable:
     """K *virtual* workers on however many real devices exist.
 
     Returns jitted ``round_fn(local, shared, key, t) -> (local_new,
     shared_new, metric)``. ``use_map`` runs workers with ``lax.map``
     instead of ``vmap`` (needed for interpret-mode Pallas solvers).
+    Under ``mode="stale"`` the ``shared`` slot is the
+    ``(shared, pending)`` pair from :func:`init_exchange_state`:
+    workers compute against the pre-apply state, the previous round's
+    pending aggregate is applied alongside, and this round's aggregate
+    rides out as the new pending. ``round_fn.flush`` absorbs the final
+    pending aggregate after the last round.
     """
+    mode = get_mode(mode)
 
     @jax.jit
     def round_fn(local, shared, key, t=1):
+        if mode.stale:
+            shared, pending = shared
         keys = jax.random.split(key, K)
         if use_map:
             upd, local_new = lax.map(
@@ -245,24 +359,47 @@ def build_virtual_round(algo: RoundAlgorithm, scheme: CommScheme, data,
                 lambda d, l, k: algo.local_step(d, l, shared, k, t))(
                     data, local, keys)
         total = scheme.all_reduce_stacked(upd)
-        shared_new = algo.apply_update(shared, total, t)
+        if mode.stale:
+            shared_new = _delayed_apply(algo, shared, pending, t)
+            shared_out = (shared_new, total)
+            # the metric must be the objective of ONE iterate: pair the
+            # shared state absorbed through round t-1 with the ROUND-t-1
+            # local state (for CoCoA, w = A@alpha - b holds exactly for
+            # that pair). Mixing in the round-t local state produces a
+            # value that is no iterate's objective and can dip below
+            # p_star. Under stale the recorded metric therefore lags
+            # one round — the honest cost of the delayed apply.
+            metric_local = local
+        else:
+            shared_new = algo.apply_update(shared, total, t)
+            shared_out = shared_new
+            metric_local = local_new
         metric_sum = jnp.sum(jax.vmap(
-            lambda d, l: algo.local_metric(d, l, shared_new))(data, local_new))
-        return local_new, shared_new, algo.finalize_metric(shared_new,
+            lambda d, l: algo.local_metric(d, l, shared_new))(data,
+                                                              metric_local))
+        return local_new, shared_out, algo.finalize_metric(shared_new,
                                                            metric_sum)
 
+    round_fn.mode = mode
+    round_fn.flush = _make_flush(algo, mode)
     return round_fn
 
 
 def build_sharded_round(algo: RoundAlgorithm, scheme: CommScheme, data,
-                        mesh: Mesh, *, donate: bool = True) -> Callable:
+                        mesh: Mesh, *, donate: bool = True,
+                        mode: "ExchangeMode | str" = "sync") -> Callable:
     """Real distribution via ``shard_map`` over the mesh's single axis.
 
     Returns jitted ``round_fn(local, shared, key, t) -> (local_new,
     shared_new, metric)`` with ``local``/``shared`` donated. The mesh
     axis size must equal the worker count K (the leading dim of every
-    ``data`` leaf and of ``local``).
+    ``data`` leaf and of ``local``). Under ``mode="stale"`` the
+    ``shared`` slot is the ``(shared, pending)`` pair — same delayed
+    apply, same collectives (the wire traffic is mode-independent,
+    which the drivers benchmark asserts against the HLO), same
+    per-worker RNG as the virtual driver.
     """
+    mode = get_mode(mode)
     axis = mesh.axis_names[0]
     K = mesh.devices.size
     for leaf in jax.tree_util.tree_leaves(data):
@@ -272,14 +409,25 @@ def build_sharded_round(algo: RoundAlgorithm, scheme: CommScheme, data,
         data_k = jax.tree_util.tree_map(lambda x: x[0], data_sh)
         local_k = local_sh[0]
         key_k = jax.random.wrap_key_data(keys_sh[0])
+        if mode.stale:
+            shared, pending = shared
         upd, local_new = algo.local_step(data_k, local_k, shared, key_k, t)
         total = scheme.all_reduce(upd, axis)
-        shared_new = algo.apply_update(shared, total, t)
+        if mode.stale:
+            shared_new = _delayed_apply(algo, shared, pending, t)
+            shared_out = (shared_new, total)
+        else:
+            shared_new = algo.apply_update(shared, total, t)
+            shared_out = shared_new
         local_new = scheme.roundtrip_local_state(local_new, axis)
-        metric_sum = lax.psum(algo.local_metric(data_k, local_new,
+        # stale pairs the lagged shared state with the round-t-1 local
+        # state so the metric is a real iterate's objective (see the
+        # virtual driver) — and matches it round for round
+        metric_local = local_k if mode.stale else local_new
+        metric_sum = lax.psum(algo.local_metric(data_k, metric_local,
                                                 shared_new), axis)
         metric = algo.finalize_metric(shared_new, metric_sum)
-        return local_new[None], shared_new, metric
+        return local_new[None], shared_out, metric
 
     data_specs = jax.tree_util.tree_map(lambda _: P(axis), data)
     sharded = compat.shard_map(
@@ -307,12 +455,16 @@ def build_sharded_round(algo: RoundAlgorithm, scheme: CommScheme, data,
     round_fn.jitted = jitted
     round_fn.split_keys = split_keys
     round_fn.mesh = mesh
+    round_fn.mode = mode
+    round_fn.flush = _make_flush(algo, mode)
     return round_fn
 
 
 def place_state(mesh: Mesh, local, shared, axis: str | None = None):
     """Device-put ``(local, shared)`` for the sharded driver: ``local``
-    partitioned over the worker axis, ``shared`` replicated."""
+    partitioned over the worker axis, ``shared`` replicated (``shared``
+    may be the stale mode's ``(shared, pending)`` pair — every leaf is
+    replicated)."""
     axis = axis or mesh.axis_names[0]
     local = jax.device_put(local, NamedSharding(mesh, P(axis)))
     shared = jax.device_put(shared, NamedSharding(mesh, P(None)))

@@ -11,8 +11,10 @@ This module provides the sweep + autotuner used by the benchmarks and by
 ``optim/local_updates.py``'s roofline-driven variant for transformer
 training. Sweeps ride the unified distributed-driver layer
 (``repro.core.distributed``) for **all three algorithms** (CoCoA,
-mini-batch SCD, mini-batch SGD-as-local-SGD) under every comm scheme:
-``base_cfg.comm_scheme`` threads through every grid point.
+mini-batch SCD, mini-batch SGD-as-local-SGD) under every comm scheme
+AND every exchange mode: ``base_cfg.comm_scheme`` and
+``base_cfg.exchange_mode`` thread through every grid point, so the
+sweep matrix is 3 algorithms x 4 schemes x 2 modes.
 
 Per-round traffic under a scheme (``CommScheme.bytes_per_round``,
 HLO-verified by the ``drivers`` benchmark) is converted to seconds by
@@ -21,7 +23,11 @@ of the framework profile's calibrated overhead, with bandwidth/latency
 measured live by ``repro.bench.timing.calibrate_link`` (a ping-pong over
 the scheme's actual collective on the current mesh). Every grid point in
 ``sweep_H`` / ``optimal_H`` / ``autotune_H`` is therefore charged its
-scheme's real wall-clock traffic — the paper's Figs 6-7 axis.
+scheme's real wall-clock traffic — the paper's Figs 6-7 axis. Under the
+``stale`` exchange mode the exchange overlaps the next round's compute,
+so the model only charges the overhang ``max(0, t_wire - t_compute)``:
+on a slow-but-hideable link that pulls the optimal H back down toward
+the fast-link optimum.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ from repro.bench.timing import (LinkCalibration, calibrate_link,  # noqa: F401
                                 measure_solver_time, synthetic_link)
 from repro.core.baselines import MinibatchSCD, MinibatchSGD, SGDConfig
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer
+from repro.core.distributed import get_mode
 from repro.core.overheads import OverheadProfile
 
 SWEEP_ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
@@ -48,7 +55,8 @@ class NoConvergedPointError(RuntimeError):
         grid = [p.H for p in sweep.points]
         super().__init__(
             f"no H in {grid} reached eps={sweep.eps} "
-            f"(algorithm={sweep.algorithm!r}, scheme={sweep.scheme!r})")
+            f"(algorithm={sweep.algorithm!r}, scheme={sweep.scheme!r}, "
+            f"mode={sweep.mode!r})")
 
 
 @dataclass
@@ -66,6 +74,7 @@ class HSweep:
     points: list = field(default_factory=list)
     algorithm: str = "cocoa"
     scheme: str = "persistent"
+    mode: str = "sync"             # exchange mode the sweep was run under
     comm_bytes_per_round: int = 0  # modelled wire traffic (H-independent)
 
 
@@ -75,45 +84,59 @@ class HSweep:
 
 @dataclass(frozen=True)
 class TimeModel:
-    """Scheme-aware wall-clock model of one round:
+    """Scheme- and mode-aware wall-clock model of one round:
 
         t_round(H) = profile.round_time(t_solver, t_ref)
-                     + comm_bytes_per_round / bandwidth + latency
+                     + comm_bytes_per_round / bandwidth + latency   # sync
+                     + max(0, t_wire - t_compute)                   # stale
 
     The first term is the paper's calibrated framework overhead
     (§5.2/Fig 3); the second charges the scheme's modelled wire traffic
     against a :class:`~repro.bench.timing.LinkCalibration` (measured by
-    ``calibrate_link`` or synthetic for what-if studies). With
-    ``link=None`` the model degrades to the bare profile, so every
+    ``calibrate_link`` or synthetic for what-if studies). Under
+    ``mode="stale"`` (the one-round-delayed apply) nothing waits on the
+    exchange — it overlaps the next round's compute, so the round only
+    pays the overhang: stale rounds hide ``min(t_wire, t_compute)``.
+    With ``link=None`` the model degrades to the bare profile, so every
     pre-existing call site keeps its behavior.
     """
     profile: OverheadProfile
     comm_bytes_per_round: int = 0
     link: LinkCalibration | None = None
+    mode: str = "sync"
+
+    def __post_init__(self):
+        get_mode(self.mode)  # the one canonical validator; raises on typos
 
     @property
     def name(self) -> str:
         return self.profile.name
 
-    def comm_time_s(self) -> float:
+    def comm_time_s(self, t_compute_s: float = 0.0) -> float:
+        """Wall seconds the round pays for the wire. ``t_compute_s``
+        only matters under ``stale``: the exchange hides behind that
+        much of the next round's compute."""
         if self.link is None or self.comm_bytes_per_round <= 0:
             return 0.0
-        return self.link.seconds_for(self.comm_bytes_per_round)
+        overlap = t_compute_s if self.mode == "stale" else 0.0
+        return self.link.seconds_for(self.comm_bytes_per_round, overlap)
 
     def round_time(self, t_solver_s: float, t_ref_s: float,
                    t_master_s: float = 0.0) -> float:
         return (self.profile.round_time(t_solver_s, t_ref_s, t_master_s)
-                + self.comm_time_s())
+                + self.comm_time_s(self.profile.compute_mult * t_solver_s))
 
     def compute_fraction(self, t_solver_s: float, t_ref_s: float) -> float:
         c = self.profile.compute_mult * t_solver_s
-        other = self.profile.overhead_units * t_ref_s + self.comm_time_s()
+        other = self.profile.overhead_units * t_ref_s + self.comm_time_s(c)
         return c / max(c + other, 1e-30)
 
     def for_sweep(self, sweep: "HSweep") -> "TimeModel":
-        """The same model charged with a sweep's modelled traffic."""
+        """The same model charged with a sweep's modelled traffic and
+        run under the sweep's exchange mode."""
         return dataclasses.replace(
-            self, comm_bytes_per_round=sweep.comm_bytes_per_round)
+            self, comm_bytes_per_round=sweep.comm_bytes_per_round,
+            mode=sweep.mode)
 
 
 def make_trainer(algorithm: str, cfg, A, b):
@@ -142,7 +165,8 @@ def sweep_H(A, b, base_cfg, H_grid, eps: float = 1e-3,
     which silently breaks once a dataclass gains derived fields)."""
     n_local = int(np.ceil(A.shape[1] / base_cfg.K))
     sweep = HSweep(eps=eps, n_local=n_local, algorithm=algorithm,
-                   scheme=base_cfg.comm_scheme)
+                   scheme=base_cfg.comm_scheme,
+                   mode=base_cfg.exchange_mode)
     for H in H_grid:
         cfg = dataclasses.replace(base_cfg, H=int(H))
         trainer = make_trainer(algorithm, cfg, A, b)

@@ -1,6 +1,56 @@
 import os
 import sys
 
+import pytest
+
 # Tests see ONE device (the dry-run fakes 512 in its own subprocess only).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# test-tier registry -> markers
+# ---------------------------------------------------------------------------
+# One place declares which tests belong to the `slow` tier (long
+# subprocess/dry-run tests deselectable with -m "not slow"), mirroring
+# the bench registry's tier table. The marker is applied at collection
+# from this registry rather than by per-test decoration, so a renamed
+# or newly added slow test cannot silently drift out of the tier — and
+# a registry entry that stops matching ANY collected test fails loudly
+# instead of rotting.
+TEST_TIERS = {
+    # nodeid substring -> tier
+    "test_distributed.py::test_dryrun_production_mesh_smoke": "slow",
+}
+
+_KNOWN_TIERS = ("slow",)
+
+
+def pytest_collection_modifyitems(config, items):
+    for tier in TEST_TIERS.values():
+        assert tier in _KNOWN_TIERS, f"unknown test tier {tier!r}"
+    unmatched = set(TEST_TIERS)
+    for item in items:
+        for pattern, tier in TEST_TIERS.items():
+            if pattern in item.nodeid:
+                item.add_marker(getattr(pytest.mark, tier))
+                unmatched.discard(pattern)
+    # a registry entry whose FILE was collected but whose test was not
+    # points at a renamed/deleted test — fail loudly instead of letting
+    # the tier silently shrink (entries whose file was not collected at
+    # all are fine: a path/-k selection legitimately skips them, as
+    # does selecting individual tests by node id, which narrows
+    # collection within a file without anything being renamed).
+    # Compare by basename: nodeids carry an invocation-dependent path
+    # prefix ("tests/test_x.py" from the repo root, "test_x.py" from
+    # inside tests/), registry entries do not.
+    if any("::" in str(arg) for arg in config.args):
+        return
+    collected_files = {os.path.basename(item.nodeid.split("::")[0])
+                       for item in items}
+    stale_entries = [p for p in unmatched
+                     if os.path.basename(p.split("::")[0])
+                     in collected_files]
+    if stale_entries:
+        raise pytest.UsageError(
+            f"test-tier registry entries matched no collected test: "
+            f"{sorted(stale_entries)} — update tests/conftest.py")

@@ -109,6 +109,55 @@ def test_compare_min_time_floor():
     assert not any(d.regression for d in deltas)
 
 
+# ----------------------------------------------------- exact-counter gate
+_BYTES = "comm_bytes_per_round_cocoa_persistent"
+
+
+def test_exact_counter_passes_on_equal_counters(tmp_path):
+    old_dir, new_dir = tmp_path / "old", tmp_path / "new"
+    counters = {_BYTES: 3072, f"{_BYTES}_stale": 3072, "rounds_to_eps_x": 15}
+    _result(counters=dict(counters)).write(str(old_dir))
+    _result(counters=dict(counters)).write(str(new_dir))
+    assert cmp_mod.main([str(old_dir), str(new_dir),
+                         "--exact-counter", "comm_bytes_per_round_"]) == 0
+
+
+def test_exact_counter_fails_on_one_byte_drift(tmp_path):
+    old_dir, new_dir = tmp_path / "old", tmp_path / "new"
+    _result(counters={_BYTES: 3072}).write(str(old_dir))
+    _result(counters={_BYTES: 3073}).write(str(new_dir))  # one byte off
+    assert cmp_mod.main([str(old_dir), str(new_dir),
+                         "--exact-counter", "comm_bytes_per_round_"]) == 1
+    # ...while without the flag the drifted counter is not gated at all
+    assert cmp_mod.main([str(old_dir), str(new_dir)]) == 0
+    # and the gate really is exact equality, not a tolerance: the delta
+    # itself flags the 1-byte drift
+    deltas = cmp_mod.compare_counters(
+        _result(counters={_BYTES: 3072}), _result(counters={_BYTES: 3073}),
+        ["comm_bytes_per_round_"])
+    assert [d.regression for d in deltas] == [True]
+
+
+def test_exact_counter_ignores_K_suffixed_on_full_mesh_baseline(tmp_path):
+    """A device-starved candidate emits `_K<n>`-suffixed byte counters
+    (its sharded worker count differs), which must NOT pair with — and
+    spuriously fail against — a full-mesh baseline: counters present on
+    only one side are skipped, both ways."""
+    old_dir, new_dir = tmp_path / "old", tmp_path / "new"
+    # full-mesh baseline: unsuffixed counters at K=4
+    _result(counters={_BYTES: 3072}).write(str(old_dir))
+    # device-starved candidate: same cell at K=2, suffixed (and with
+    # genuinely different bytes — exactly why it must not be compared)
+    _result(counters={f"{_BYTES}_K2": 1536}).write(str(new_dir))
+    assert cmp_mod.main([str(old_dir), str(new_dir),
+                         "--exact-counter", "comm_bytes_per_round_"]) == 0
+    deltas = cmp_mod.compare_counters(
+        _result(counters={_BYTES: 3072}),
+        _result(counters={f"{_BYTES}_K2": 1536}),
+        ["comm_bytes_per_round_"])
+    assert deltas == []  # nothing paired, nothing gated
+
+
 # ------------------------------------------------------------------ timing
 def test_timing_policy_reduce():
     assert TimingPolicy(reduce="min").combine([3.0, 1.0, 2.0]) == 1.0
@@ -133,14 +182,16 @@ def test_smoke_tier_end_to_end(tmp_path):
         assert loaded.timings_s, name
         assert loaded.env.device_count >= 1
     # drivers must cover the full matrix: 3 algorithms x both execution
-    # drivers x all four comm schemes
-    got = {(r["algorithm"], r["driver"], r["scheme"])
+    # drivers x all four comm schemes x both exchange modes (48 rows —
+    # the 24 modelled-bytes cells each run on both drivers)
+    got = {(r["algorithm"], r["driver"], r["scheme"], r["mode"])
            for r in by["drivers"].rows}
-    assert got == {(a, d, s)
+    assert got == {(a, d, s, m)
                    for a in ("cocoa", "minibatch_scd", "minibatch_sgd")
                    for d in ("virtual", "sharded")
                    for s in ("persistent", "spark_faithful", "compressed",
-                             "reduce_scatter")}
+                             "reduce_scatter")
+                   for m in ("sync", "stale")}
     # every cell reports modelled bytes sized to the scheme's dtypes —
     # except reduce_scatter on a single-device mesh, whose ring volume
     # 2*(K-1)/K*len is genuinely zero at K=1

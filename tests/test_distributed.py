@@ -1,12 +1,26 @@
 """Multi-device tests (subprocess with faked host devices): shard_map
-CoCoA driver, expert-parallel MoE, local-update rounds, and a dry-run
-smoke on the production mesh.
+CoCoA driver, the sync/stale exchange-mode contract, expert-parallel
+MoE, local-update rounds, and a dry-run smoke on the production mesh —
+plus the in-process quantizer property test (hypothesis when installed,
+a deterministic seed battery otherwise; NOT a module-wide importorskip,
+so the rest of this file always runs).
 """
+import functools
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
+
+# hypothesis is a dev extra (CI installs it via .[dev]); without it the
+# property test below degrades to a fixed battery of generated examples
+# instead of skipping, so the quantizer contract is always exercised
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -19,6 +33,112 @@ def _run(py: str, ndev: int = 8, timeout: int = 560) -> str:
                          text=True, timeout=timeout, env=env)
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# quantizer property test (in-process; hypothesis optional)
+# ---------------------------------------------------------------------------
+@functools.cache
+def _quant_paths():
+    """The execution paths of the quantize/dequantize round-trip, all
+    JITTED (as the drivers run them; jit re-specializes per input shape
+    on its own): the vmap stacked path, the per-shard shard_map path on
+    a 1-device ``workers`` axis (the 4-device variant is covered by
+    ``test_compressed_quantizer_bit_identical_across_drivers`` below),
+    and the aggregate each mode applies. Eager execution is
+    deliberately NOT a reference here — XLA may lower the division by
+    the absmax scale differently than op-by-op dispatch, and the
+    drivers' contract is jitted-vs-jitted."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import (dequantize_update, get_scheme,
+                                        quantize_update)
+    from repro.utils import compat
+
+    @jax.jit
+    def vmap_path(d):
+        q, s = jax.vmap(quantize_update)(d)
+        return dequantize_update(q, s[:, None])
+
+    mesh = compat.make_mesh((1,), ("workers",))
+    shard_path = jax.jit(compat.shard_map(
+        lambda d: dequantize_update(*quantize_update(d[0]))[None],
+        mesh, in_specs=P("workers"), out_specs=P("workers")))
+    agg_path = jax.jit(get_scheme("compressed").all_reduce_stacked)
+    sum_path = jax.jit(lambda rows: jax.numpy.sum(rows, axis=0))
+    return vmap_path, shard_path, agg_path, sum_path
+
+
+def _check_quantize_roundtrip(dv_np: np.ndarray):
+    """The quantizer contract on one (K, L) update stack: elementwise
+    round-trip error bounded by scale/2, and the vmap path bit-identical
+    to the per-shard shard_map path (both for the per-worker vectors and
+    for the aggregate the round actually applies)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distributed import quantize_update
+
+    dv = jnp.asarray(dv_np, jnp.float32)
+    vmap_path, shard_path, agg_path, sum_path = _quant_paths()
+    deq = vmap_path(dv)
+    _, s = jax.vmap(quantize_update)(dv)
+    # |dequant - dv| <= scale/2 elementwise: absmax scaling puts every
+    # entry inside [-127, 127] * scale, so clipping never bites and the
+    # only error is round-to-nearest (the f32 divide/multiply round-trip
+    # gets a 1-ulp-ish allowance)
+    err = np.abs(np.asarray(deq) - np.asarray(dv))
+    bound = 0.5 * np.asarray(s)[:, None] * (1 + 1e-5) + 1e-30
+    assert (err <= bound).all(), (
+        f"round-trip error {err.max()} exceeds scale/2 "
+        f"(worst scale {np.asarray(s).max()})")
+    # bit-identity with the shard_map path, per worker row
+    shard_rows = [shard_path(row[None]) for row in dv]
+    for k, row in enumerate(shard_rows):
+        assert np.array_equal(np.asarray(row[0]), np.asarray(deq[k])), \
+            f"worker {k}: vmap and shard_map dequants differ bitwise"
+    # ... and for the aggregate the compressed exchange applies
+    agg_v = agg_path(dv)
+    agg_s = sum_path(jnp.concatenate(shard_rows, axis=0))
+    assert np.array_equal(np.asarray(agg_v), np.asarray(agg_s)), \
+        "aggregate drift between the vmap and shard_map paths"
+
+
+def _random_update_stack(seed: int) -> np.ndarray:
+    """A (4, 64) f32 update stack with per-worker magnitudes swept over
+    ~40 decades (denormal-adjacent through 1e20), plus exact zeros."""
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal((4, 64)).astype(np.float32)
+    exps = rng.uniform(-20.0, 20.0, size=(4, 1)).astype(np.float32)
+    dv = base * (10.0 ** exps)
+    if seed % 3 == 0:
+        dv[seed % 4] = 0.0          # an all-zero worker update
+    if seed % 4 == 0:
+        dv[0, seed % 64] = 0.0      # sparse zeros inside a row
+    return dv.astype(np.float32)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_quantize_roundtrip_property(seed):
+        _check_quantize_roundtrip(_random_update_stack(seed))
+else:
+    @pytest.mark.parametrize("seed", range(30))
+    def test_quantize_roundtrip_property(seed):
+        _check_quantize_roundtrip(_random_update_stack(seed))
+
+
+def test_quantize_roundtrip_edge_values():
+    """Exact edge cases the random sweep may miss: all-zero stacks, a
+    single huge entry, and values straddling the int8 clip boundary."""
+    _check_quantize_roundtrip(np.zeros((4, 64), np.float32))
+    spike = np.zeros((4, 64), np.float32)
+    spike[1, 3] = 3e38
+    _check_quantize_roundtrip(spike)
+    ramp = np.tile(np.linspace(-1.0, 1.0, 64, dtype=np.float32), (4, 1))
+    _check_quantize_roundtrip(ramp * 127.49)
 
 
 def test_cocoa_sharded_matches_virtual():
@@ -86,6 +206,95 @@ for algo in ("cocoa", "minibatch_scd", "minibatch_sgd"):
         hs = ts.run_sharded(12, record_every=12)
         rel = abs(hv.primal[-1] - hs.primal[-1]) / abs(hv.primal[-1])
         assert rel < 1e-4, (algo, scheme, hv.primal, hs.primal)
+print("OK")
+""", ndev=4, timeout=560)
+
+
+def test_single_round_stale_equals_sync_all_algorithms_both_drivers():
+    """Regression pin on the delayed apply's off-by-one: with exactly
+    one round there is nothing to be stale about — the flushed `stale`
+    iterate must be IDENTICAL to the `sync` iterate for all 3 algorithms
+    on both drivers (same per-worker RNG, same aggregate, applied once
+    either way). A stale run that drops or double-applies the pending
+    aggregate fails this immediately. Multi-round trajectories must then
+    genuinely diverge (the knob does something)."""
+    _run("""
+import numpy as np
+from repro.data import make_glm_data
+from repro.core import (CoCoAConfig, CoCoATrainer, MinibatchSCD,
+                        MinibatchSGD, SGDConfig)
+A, b, _ = make_glm_data(m=96, n=256, density=0.2, zipf_a=1.1, seed=42)
+def make(algo, mode):
+    if algo == "minibatch_sgd":
+        return MinibatchSGD(SGDConfig(batch_frac=1.0, step_size=0.1,
+                                      lam=1.0, K=4, seed=0,
+                                      exchange_mode=mode), A, b)
+    cfg = CoCoAConfig(K=4, H=64, seed=0, exchange_mode=mode)
+    return (MinibatchSCD if algo == "minibatch_scd" else CoCoATrainer)(cfg, A, b)
+for algo in ("cocoa", "minibatch_scd", "minibatch_sgd"):
+    for driver in ("virtual", "sharded"):
+        def run1(tr, rounds=1):
+            if driver == "sharded":
+                return tr.run_sharded(rounds, record_every=1)
+            return (tr.run_workers(rounds, record_every=1)
+                    if algo == "minibatch_sgd"
+                    else tr.run(rounds, record_every=1))
+        ts, tt = make(algo, "sync"), make(algo, "stale")
+        run1(ts); run1(tt)
+        assert np.array_equal(ts.alpha_final, tt.alpha_final), (
+            algo, driver, "alpha drift after 1 round")
+        if algo != "minibatch_sgd":  # CoCoA-family: shared residual too
+            assert np.array_equal(ts.w_final, tt.w_final), (
+                algo, driver, "w drift after 1 round")
+    # with >1 round the one-round-delayed apply must actually change
+    # the trajectory (otherwise the knob is a no-op)
+    ts, tt = make(algo, "sync"), make(algo, "stale")
+    hs = (ts.run_workers(5, record_every=5) if algo == "minibatch_sgd"
+          else ts.run(5, record_every=5))
+    ht = (tt.run_workers(5, record_every=5) if algo == "minibatch_sgd"
+          else tt.run(5, record_every=5))
+    assert not np.array_equal(ts.alpha_final, tt.alpha_final), (
+        algo, "stale trajectory identical to sync after 5 rounds")
+print("OK")
+""", ndev=4, timeout=560)
+
+
+def test_stale_driver_agreement_and_same_collectives():
+    """The exchange-mode contract on the sharded driver: under `stale`
+    the virtual and sharded drivers still follow the same trajectory for
+    every comm scheme, and staleness never changes what the collectives
+    move — the optimized HLO's collective traffic is byte-for-byte the
+    same as the sync round's."""
+    _run("""
+import numpy as np, jax.random as jr
+from repro.data import make_glm_data
+from repro.core import CoCoAConfig, CoCoATrainer, COMM_SCHEMES
+from repro.utils.hlo import parse_collectives
+from repro.utils.compat import make_mesh
+A, b, _ = make_glm_data(m=96, n=256, density=0.2, zipf_a=1.1, seed=42)
+mesh = make_mesh((4,), ("workers",))
+def traffic(tr):
+    rf = tr.build_sharded_round(mesh)
+    local, shared = tr.init_state()
+    txt = rf.jitted.lower(rf.split_keys(jr.key(0)),
+                          local, shared, 1).compile().as_text()
+    s = parse_collectives(txt)
+    return {k: v[1] for k, v in s.by_kind.items()}
+for scheme in COMM_SCHEMES:
+    tv = CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme, seed=0,
+                                  exchange_mode="stale"), A, b)
+    hv = tv.run(8, record_every=8)
+    ts = CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme, seed=0,
+                                  exchange_mode="stale"), A, b)
+    hs = ts.run_sharded(8, record_every=8)
+    rel = abs(hv.primal[-1] - hs.primal[-1]) / abs(hv.primal[-1])
+    assert rel < 1e-4, (scheme, hv.primal, hs.primal)
+    t_sync = traffic(CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme,
+                                              seed=0), A, b))
+    t_stale = traffic(CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme,
+                                               seed=0,
+                                               exchange_mode="stale"), A, b))
+    assert t_sync == t_stale, (scheme, t_sync, t_stale)
 print("OK")
 """, ndev=4, timeout=560)
 
@@ -209,10 +418,10 @@ print("OK")
 """)
 
 
-@pytest.mark.slow
 def test_dryrun_production_mesh_smoke():
     """The real deliverable-(e) path: tinyllama decode on the 16x16 and
-    2x16x16 meshes must lower + compile in a 512-device subprocess."""
+    2x16x16 meshes must lower + compile in a 512-device subprocess.
+    (`slow` tier — marked from the registry in conftest.py, not here.)"""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     out = subprocess.run(

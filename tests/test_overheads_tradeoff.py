@@ -138,6 +138,62 @@ def test_time_model_scheme_ordering_fixed_H():
             < t["spark_faithful"])
 
 
+def test_time_model_stale_overlap_term():
+    """The stale exchange mode hides min(t_comm, t_compute): the round
+    only pays the overhang, a fully-hidden transfer costs nothing, and
+    the link-level overlap argument does the same arithmetic."""
+    link = synthetic_link(1e9, latency_s=1e-4)
+    E = PROFILES["E_mpi"]
+    nbytes = 10 ** 9  # 1 s on the wire (+ the 100 us latency)
+    sync = TimeModel(E, nbytes, link)
+    stale = TimeModel(E, nbytes, link, mode="stale")
+    t_solver = 0.25  # E_mpi compute_mult = 1 -> t_compute = 0.25 s
+    t_wire = link.seconds_for(nbytes)
+    hidden = min(t_wire, E.compute_mult * t_solver)
+    assert stale.round_time(t_solver, 1.0) == pytest.approx(
+        sync.round_time(t_solver, 1.0) - hidden)
+    # fully hidden: compute >= wire -> bare profile time, not negative
+    tiny = TimeModel(E, 10 ** 6, link, mode="stale")  # ~1.1 ms wire
+    assert tiny.round_time(1.0, 1.0) == E.round_time(1.0, 1.0)
+    assert tiny.comm_time_s(t_compute_s=1.0) == 0.0
+    # the LinkCalibration primitive agrees
+    assert link.seconds_for(nbytes, overlap_s=0.25) == pytest.approx(
+        t_wire - 0.25)
+    assert link.seconds_for(nbytes, overlap_s=10.0) == 0.0
+    # sync ignores the compute term entirely
+    assert sync.comm_time_s(t_compute_s=10.0) == pytest.approx(t_wire)
+    # hiding can only help: stale round time never exceeds sync's
+    for ts in (0.0, 0.1, 1.0, 10.0):
+        assert (stale.round_time(ts, 1.0)
+                <= sync.round_time(ts, 1.0) + 1e-12)
+    with pytest.raises(ValueError, match="unknown exchange mode"):
+        TimeModel(E, mode="async")
+
+
+def test_stale_mode_shifts_optimal_H_down_on_hideable_link():
+    """The paper's staleness result in the time model: on a slow link
+    whose wire time is hideable behind local compute, the stale overlap
+    term moves the optimal H strictly DOWN (sync must amortize the
+    constant wire term with big rounds; stale needn't) and time-to-eps
+    improves."""
+    sweep = _toy_sweep()
+    sweep.comm_bytes_per_round = 10 ** 9
+    link = synthetic_link(1e9)  # 1 s wire = compute at H=1024
+    E = PROFILES["E_mpi"]
+    h_sync, t_sync = optimal_H(TimeModel(E, link=link).for_sweep(sweep), sweep)
+    stale_sweep = HSweep(eps=sweep.eps, n_local=sweep.n_local,
+                         t_ref_s=sweep.t_ref_s, points=sweep.points,
+                         mode="stale",
+                         comm_bytes_per_round=sweep.comm_bytes_per_round)
+    h_stale, t_stale = optimal_H(
+        TimeModel(E, link=link).for_sweep(stale_sweep), stale_sweep)
+    assert h_stale < h_sync, (h_stale, h_sync)
+    assert t_stale < t_sync
+    # for_sweep adopted the sweep's mode
+    assert TimeModel(E, link=link).for_sweep(stale_sweep).mode == "stale"
+    assert TimeModel(E, link=link).for_sweep(sweep).mode == "sync"
+
+
 def test_calibrate_link_fake_bandwidth_deterministic():
     """The fake-bandwidth path runs no collectives: two calls return the
     identical synthetic calibration, byte for byte."""
