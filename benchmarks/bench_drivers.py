@@ -1,26 +1,33 @@
-"""Driver/comm-scheme/exchange-mode coverage: the full 3-algorithm x
-4-scheme x 2-mode matrix (paper §4-§5.4) on the unified
+"""Driver/transport/codec/exchange-mode coverage: the full 3-algorithm
+x (transport x codec) x 2-mode matrix (paper §4-§5.4) on the unified
 distributed-driver layer.
 
 Every algorithm (CoCoA, mini-batch SCD, mini-batch SGD) runs under every
-communication scheme (`persistent`, `spark_faithful`, `compressed`,
-`reduce_scatter`) and every exchange mode (`sync`, `stale` — the
-one-round-delayed apply, the paper's Spark scheduling-delay regime as a
-knob) through BOTH execution drivers — the vmap virtual-worker path and
-the shard_map path — with fixed seeds and rounds-to-eps asserted within
-per-algorithm tolerance bands in the smoke tier (the CI gate).
+communication scheme — the exact transports `persistent`,
+`spark_faithful`, `reduce_scatter` plus the codec-composed `compressed`
+transport with each wire codec (`compressed:f32` identity,
+`compressed:int8`, packed `compressed:int4`) — and every exchange mode
+(`sync`, `stale` — the one-round-delayed apply, the paper's Spark
+scheduling-delay regime as a knob) through BOTH execution drivers — the
+vmap virtual-worker path and the shard_map path — with fixed seeds and
+rounds-to-eps asserted within per-algorithm tolerance bands in the
+smoke tier (the CI gate).
 
-For each of the 24 (algorithm x scheme x mode) cells the modelled
+For each of the 36 (algorithm x scheme x mode) cells the modelled
 `comm_bytes_per_round` is checked against the optimized HLO of the
 sharded round: for master-centric schemes the derived per-round traffic
 is 2 x K x per-worker collective operand bytes (excluding the scalar
-metric psum); for `reduce_scatter` it is the ring volume — (K-1) x the
-reduce-scatter operand plus K x (K-1) x the all-gather operand, i.e.
-2*(K-1)/K of the padded vector per worker each way. Derived must equal
-the model exactly — in BOTH modes: the stale exchange delays the apply
-but still runs the identical collective every round, so staleness may
-never change the bytes on the wire. `run_sharded` needs a multi-device
-mesh — `python -m repro.bench.run --smoke` fakes one via
+metric psum) — under `compressed` that operand is the codec's wire
+tuple (int8 payload + f32 scale; for int4 a packed ceil(m/2)-byte u8
+payload + f32 scale); for `reduce_scatter` it is the ring volume —
+(K-1) x the reduce-scatter operand plus K x (K-1) x the all-gather
+operand, i.e. 2*(K-1)/K of the padded vector per worker each way.
+Derived must equal the model exactly — in BOTH modes: the stale
+exchange delays the apply but still runs the identical collective every
+round, so staleness may never change the bytes on the wire. The HLO is
+also checked for the codec's wire dtype (s8 / packed u8 all-gathers
+present exactly when the codec is int8 / int4). `run_sharded` needs a
+multi-device mesh — `python -m repro.bench.run --smoke` fakes one via
 ``--xla_force_host_platform_device_count``; when only one device exists
 (e.g. in-process tests) the sharded leg degrades to a K=1 mesh, which
 still exercises the collective code paths but skips the byte checks
@@ -34,22 +41,27 @@ import time
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
 from repro.bench.timing import time_callable
-from repro.core.distributed import COMM_SCHEMES, EXCHANGE_MODES
+from repro.core.distributed import EXCHANGE_MODES, get_scheme
 from repro.core.glm import suboptimality
 
-SCHEMES = COMM_SCHEMES
+# every transport x codec cell: the exact transports compose only with
+# the f32 identity (validated by CommScheme), `compressed` with all
+# three codecs — bare "compressed" (the :int8 alias) is covered by the
+# codec-regression test in tests/test_distributed.py, not re-run here
+SCHEMES = ("persistent", "spark_faithful", "compressed:f32",
+           "compressed:int8", "compressed:int4", "reduce_scatter")
 MODES = EXCHANGE_MODES
 ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
 
 # Fixed-seed rounds-to-eps bands per algorithm (smoke tier: m=96, n=256,
 # K=4, seed 42 data / seed 0 trainer). Measured centers ~15 / ~32 / ~93;
-# bands leave ~3x headroom for jax-version jitter. The `compressed`
-# scheme tolerates 2x extra rounds from int8 quantization error, and
-# `stale` gets 1.5x band headroom for the one-round-delayed apply —
-# measured cost on the smoke problem is within +-2 rounds of sync (the
-# metric honestly lags one round, and CoCoA's conservative sigma=K
-# damping absorbs — here slightly over-relaxes through — the staleness),
-# but the tax grows with conditioning so the band stays loose.
+# bands leave ~3x headroom for jax-version jitter. The int8 codec
+# tolerates 2x extra rounds from quantization error, and `stale` gets
+# 1.5x band headroom for the one-round-delayed apply — measured cost on
+# the smoke problem is within +-2 rounds of sync (the metric honestly
+# lags one round, and CoCoA's conservative sigma=K damping absorbs —
+# here slightly over-relaxes through — the staleness), but the tax
+# grows with conditioning so the band stays loose.
 SMOKE_BANDS = {
     "cocoa": (2, 60),
     "minibatch_scd": (8, 120),
@@ -58,19 +70,43 @@ SMOKE_BANDS = {
 STALE_BAND_MULT = 1.5
 
 
-# mini-batch SCD's 1/sigma-damped updates shrink per-round progress
-# relative to the quantizer's absmax scale, so its int8 noise floor sits
-# near 2e-3 on the smoke problem; CoCoA and SGD converge through it
-COMPRESSED_EPS_MULT = {"cocoa": 1, "minibatch_scd": 4, "minibatch_sgd": 1}
+# Per-codec eps multipliers, calibrated to each codec's quantization
+# noise floor on the smoke problem. int8: mini-batch SCD's 1/sigma-
+# damped updates shrink per-round progress relative to the quantizer's
+# absmax scale, so its noise floor sits near 2e-3; CoCoA and SGD
+# converge through it. int4's grid is ~17x coarser (scale absmax/7.5 vs
+# absmax/127), so its floor sits near 6e-2 (9e-2 for damped SCD) — the
+# int4 cells therefore run at a coarse eps ~2x above that floor: the
+# honest trade of the 8x-cheaper wire is early progress per byte, not
+# tight tolerance. Coarse eps is hit in a handful of rounds, so the
+# int4 cells drop the per-algorithm lower band (lo=1).
+CODEC_EPS_MULT = {
+    "int8": {"cocoa": 1, "minibatch_scd": 4, "minibatch_sgd": 1},
+    "int4": {"cocoa": 128, "minibatch_scd": 192, "minibatch_sgd": 16},
+}
+
+# the wire dtype the codec's payload all-gather must show in the HLO
+CODEC_WIRE_DTYPE = {"f32": None, "int8": "s8", "int4": "u8"}
 
 
 def _eps(algo: str, scheme: str, wl) -> float:
     # the sqrt-decay SGD schedule cannot hit 1e-3 in smoke budgets;
     # 10x looser still separates the schemes
     eps = 10 * wl.eps if algo == "minibatch_sgd" else wl.eps
-    if scheme == "compressed":
-        eps *= COMPRESSED_EPS_MULT[algo]
-    return eps
+    codec = get_scheme(scheme).codec.name
+    return eps * CODEC_EPS_MULT.get(codec, {}).get(algo, 1)
+
+
+def _band(algo: str, scheme: str, mode: str) -> tuple[int, int]:
+    lo, hi = SMOKE_BANDS[algo]
+    codec = get_scheme(scheme).codec.name
+    if codec == "int8":
+        hi *= 2          # quantization error costs extra rounds
+    elif codec == "int4":
+        lo, hi = 1, hi   # coarse eps (see CODEC_EPS_MULT) is hit fast
+    if mode == "stale":
+        hi = int(STALE_BAND_MULT * hi)
+    return lo, hi
 
 
 def _make_trainer(algo: str, wl, tier: str, K: int, scheme: str, mode: str,
@@ -139,8 +175,8 @@ def _run_sharded(tr, wl, eps, round_fn):
 
 
 def _hlo_traffic(tr, round_fn):
-    """(derived bytes/round, int8 collective present) from the optimized
-    HLO of the sharded round.
+    """(derived bytes/round, quantized wire dtypes present) from the
+    optimized HLO of the sharded round.
 
     Master-centric schemes: derived = 2 x K x per-worker collective
     operand bytes; the one scalar f32 metric psum (4 bytes) is excluded
@@ -148,7 +184,9 @@ def _hlo_traffic(tr, round_fn):
     ``reduce_scatter``: the ring volume — each worker moves (K-1)/K of
     the reduce-scatter operand and (K-1) x its all-gather shard, so
     derived = (K-1) x rs_operand + K x (K-1) x ag_operand (the metric
-    psum shows up as an all-reduce and is simply not counted)."""
+    psum shows up as an all-reduce and is simply not counted).
+    ``wire_dtypes`` is the set of sub-f32 dtypes seen in all-gather ops
+    (s8 for the int8 codec, u8 for the packed int4 nibbles)."""
     import jax
 
     from repro.utils.hlo import parse_collectives
@@ -158,19 +196,20 @@ def _hlo_traffic(tr, round_fn):
                                 local, shared, 1).compile().as_text()
     stats = parse_collectives(txt)
     K = tr.cfg.K
-    if tr.scheme.name == "reduce_scatter":
+    if tr.scheme.transport == "reduce_scatter":
         _, rs_ob, _ = stats.by_kind.get("reduce-scatter", (0, 0, 0))
         _, ag_ob, _ = stats.by_kind.get("all-gather", (0, 0, 0))
         derived = (K - 1) * rs_ob + K * (K - 1) * ag_ob
     else:
         derived = 2 * K * (stats.total_operand_bytes - 4)
-    int8 = bool(re.search(r"s8\[[0-9,]+\]\S* all-gather", txt))
-    return derived, int8
+    wire_dtypes = {dt for dt in ("s8", "u8")
+                   if re.search(dt + r"\[[0-9,]+\]\S* all-gather", txt)}
+    return derived, wire_dtypes
 
 
 @benchmark("drivers", figures="§5.3-5.4",
-           description="3 algorithms x 4 comm schemes x 2 exchange modes, "
-                       "virtual + sharded")
+           description="3 algorithms x (transport x codec) x 2 exchange "
+                       "modes, virtual + sharded")
 def run(ctx: BenchContext) -> dict:
     import jax
 
@@ -181,15 +220,14 @@ def run(ctx: BenchContext) -> dict:
     mesh = make_mesh((K_sh,), ("workers",))
     rows, timings, counters, notes = [], {}, {}, []
     for algo in ALGORITHMS:
-        lo, hi = SMOKE_BANDS[algo]
         for scheme in SCHEMES:
+            # ':' would leak into counter keys and shell-unfriendly
+            # row labels; cells use the flattened form
+            scheme_key = scheme.replace(":", "_")
+            codec = get_scheme(scheme).codec.name
             for mode in MODES:
                 eps = _eps(algo, scheme, wl)
-                # compressed tolerates extra rounds from int8
-                # quantization, stale from the one-round-delayed apply
-                band_hi = 2 * hi if scheme == "compressed" else hi
-                if mode == "stale":
-                    band_hi = int(STALE_BAND_MULT * band_hi)
+                lo, band_hi = _band(algo, scheme, mode)
                 mode_sfx = "" if mode == "sync" else f"_{mode}"
                 tr_v = _make_trainer(algo, wl, ctx.tier, wl.K, scheme, mode,
                                      ctx.seed)
@@ -199,14 +237,15 @@ def run(ctx: BenchContext) -> dict:
                 round_fn = tr_s.build_sharded_round(mesh)  # 1 compile/cell
                 r_s, t_s, s_s = _run_sharded(tr_s, wl, eps, round_fn)
                 modelled = tr_s.comm_bytes_per_round()
-                derived, int8 = (_hlo_traffic(tr_s, round_fn) if K_sh >= 2
-                                 else (None, None))
+                derived, wire_dt = (_hlo_traffic(tr_s, round_fn)
+                                    if K_sh >= 2 else (None, None))
                 for driver, r2e, t_round, sub in (
                         ("virtual", r_v, t_v, s_v),
                         ("sharded", r_s, t_s, s_s)):
-                    cell = f"{algo}_{driver}_{scheme}{mode_sfx}"
+                    cell = f"{algo}_{driver}_{scheme_key}{mode_sfx}"
                     rows.append({"algorithm": algo, "driver": driver,
-                                 "scheme": scheme, "mode": mode,
+                                 "scheme": scheme, "codec": codec,
+                                 "mode": mode,
                                  "rounds_to_eps": r2e,
                                  "t_round_s": round(t_round, 6),
                                  "final_subopt": f"{sub:.2e}",
@@ -231,18 +270,21 @@ def run(ctx: BenchContext) -> dict:
                 # counters that would pair with — and exactly mismatch —
                 # a full-mesh baseline under `compare --exact-counter`
                 suffix = "" if K_sh == wl.K else f"_K{K_sh}"
-                counters[f"comm_bytes_per_round_{algo}_{scheme}"
+                counters[f"comm_bytes_per_round_{algo}_{scheme_key}"
                          f"{mode_sfx}{suffix}"] = modelled
                 if derived is not None:
-                    counters[f"hlo_bytes_per_round_{algo}_{scheme}"
+                    counters[f"hlo_bytes_per_round_{algo}_{scheme_key}"
                              f"{mode_sfx}{suffix}"] = derived
                     assert modelled == derived, (
                         f"{algo}/{scheme}/{mode}: modelled "
                         f"comm_bytes_per_round {modelled} != {derived} "
                         f"derived from the HLO collectives (K={K_sh})")
-                    assert int8 == (scheme == "compressed"), (
-                        f"{algo}/{scheme}/{mode}: int8 collective "
-                        f"presence {int8} does not match the scheme")
+                    expect_dt = CODEC_WIRE_DTYPE[codec]
+                    expect = {expect_dt} if expect_dt else set()
+                    assert wire_dt == expect, (
+                        f"{algo}/{scheme}/{mode}: quantized collective "
+                        f"dtypes {wire_dt} do not match the codec "
+                        f"(expected {expect})")
                 notes.append(f"{algo}/{scheme}/{mode}: virtual {r_v}, "
                              f"sharded (K={K_sh}) {r_s} rounds to "
                              f"eps={eps}; {modelled} modelled bytes/round"

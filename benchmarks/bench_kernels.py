@@ -1,15 +1,21 @@
-"""Kernel microbenchmark: Pallas SCD (interpret on CPU; compiled on TPU)
-vs the pure-jnp oracle, timed under the harness's warmup/repeat/min
-discipline."""
+"""Kernel microbenchmark: the Pallas kernels (interpret on CPU;
+compiled on TPU) vs their pure-jnp oracles, timed under the harness's
+warmup/repeat/min discipline — the SCD local solver and the fused
+quantize+pack wire encoders (int8 and packed int4), whose interpret-
+mode outputs are asserted bit-identical to the codec oracle so the
+kernel's cost AND correctness both show up in the trajectory."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
 from repro.bench.timing import TimingPolicy, time_callable
-from repro.kernels import scd_steps_kernel, scd_steps_ref
+from repro.kernels import (quantize_pack_int4, quantize_pack_int4_ref,
+                           quantize_pack_int8, quantize_pack_int8_ref,
+                           scd_steps_kernel, scd_steps_ref)
 
 
 @benchmark("kernels", figures="§kernels",
@@ -38,9 +44,38 @@ def run(ctx: BenchContext) -> dict:
                          "derived": f"{flops / t / 1e9:.2f}GFLOP/s"})
             timings[f"{label}_m{m}_H{H}"] = t
             counters[f"gflops_{label}_m{m}_H{H}"] = round(flops / t / 1e9, 3)
+    # fused quantize+pack: oracle (jitted jnp) vs Pallas interpret, with
+    # the interpret output asserted bit-identical to the oracle — the
+    # same contract the comm codecs rely on for the compressed exchange
+    quant = {"quant_int8": (jax.jit(quantize_pack_int8_ref),
+                            quantize_pack_int8),
+             "quant_int4": (jax.jit(quantize_pack_int4_ref),
+                            quantize_pack_int4)}
+    for L in wl.quant_lengths:
+        dv = jnp.asarray(rng.standard_normal(L), jnp.float32)
+        for name, (ref_fn, ker_fn) in quant.items():
+            p_ref, s_ref = ref_fn(dv)
+            p_ker, s_ker = ker_fn(dv)
+            assert (np.array_equal(np.asarray(p_ref), np.asarray(p_ker))
+                    and float(s_ref) == float(s_ker)), (
+                f"{name} L={L}: Pallas interpret output is not "
+                f"bit-identical to the jnp oracle")
+            t_ref = time_callable(ref_fn, dv, policy=policy)
+            t_ker = time_callable(ker_fn, dv, policy=policy)
+            wire = p_ref.size * p_ref.dtype.itemsize + 4
+            for label, t in ((f"{name}_ref", t_ref),
+                             (f"{name}_pallas_interp", t_ker)):
+                rows.append({"name": f"{label}_L{L}",
+                             "us_per_call": round(t * 1e6, 1),
+                             "derived": f"{4 * L / wire:.2f}x smaller"})
+                timings[f"{label}_L{L}"] = t
+            counters[f"wire_bytes_{name}_L{L}"] = wire
     notes = ["pallas numbers are interpret-mode (CPU emulation) — "
-             "correctness benchmark, not TPU speed"]
+             "correctness benchmark, not TPU speed",
+             "quantize+pack interpret outputs asserted bit-identical "
+             "to the codec oracle at every length"]
     return {"params": {"shapes": [list(s) for s in wl.kernel_shapes],
+                       "quant_lengths": list(wl.quant_lengths),
                        "reps": reps},
             "timings_s": timings, "counters": counters,
             "rows": rows, "notes": notes}

@@ -28,7 +28,10 @@ RESULTS_DIR = os.environ.get("BENCH_OUT", "results/bench")
 # schemes whose exchange is an exact f32 sum: identical trajectories
 # (the virtual driver sums all of them the same way), so a measured
 # sweep can be shared between them and only the byte accounting differs
-EXACT_SUM_SCHEMES = ("persistent", "spark_faithful", "reduce_scatter")
+# — including the compressed transport under the f32 identity codec;
+# quantizing codecs (compressed[:int8], compressed:int4) really re-run
+EXACT_SUM_SCHEMES = ("persistent", "spark_faithful", "reduce_scatter",
+                     "compressed:f32")
 
 
 @dataclass(frozen=True)
@@ -46,6 +49,8 @@ class Workload:
     sgd_rounds: int         # MLlib-SGD baseline budget (Fig 5)
     scaling_ks: tuple       # worker counts for Fig 8
     kernel_shapes: tuple    # (m, n, H) triples for the microbench
+    quant_lengths: tuple    # update-vector lengths for the fused
+    #                         quantize+pack kernel microbench
     reps: int               # timing repetitions
     sgd_step: float         # MLlib-style base step size for the tier
     sgd_h_grid: tuple       # local-SGD H grid (local steps per round)
@@ -61,18 +66,21 @@ WORKLOADS: dict[str, Workload] = {
         h_fracs=(0.2, 1.0, 4.0), max_rounds=400,
         decomp_rounds=10, sgd_rounds=400, scaling_ks=(2, 4),
         kernel_shapes=((64, 64, 64), (128, 64, 128)),
+        quant_lengths=(96, 1024),
         reps=1, sgd_step=0.1, sgd_h_grid=(1, 4), rounds_band=(2, 180)),
     "quick": Workload(
         m=256, n=1024, K=8, density=0.15, eps=1e-3, lam=1.0,
         h_fracs=(0.05, 0.2, 1.0, 4.0), max_rounds=1000,
         decomp_rounds=50, sgd_rounds=2000, scaling_ks=(2, 4, 8),
         kernel_shapes=((256, 256, 256), (512, 256, 512)),
+        quant_lengths=(1024, 16384),
         reps=2, sgd_step=0.05, sgd_h_grid=(1, 4, 16)),
     "full": Workload(
         m=512, n=2048, K=8, density=0.15, eps=1e-3, lam=1.0,
         h_fracs=(0.05, 0.2, 1.0, 4.0, 16.0), max_rounds=1500,
         decomp_rounds=100, sgd_rounds=4000, scaling_ks=(2, 4, 8, 16),
         kernel_shapes=((256, 256, 256), (512, 256, 512), (1024, 512, 1024)),
+        quant_lengths=(1024, 16384, 262144),
         reps=2, sgd_step=0.05, sgd_h_grid=(1, 4, 16)),
 }
 

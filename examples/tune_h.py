@@ -13,8 +13,15 @@ rounds-to-eps is measured on the actual stale trajectories and the time
 model hides ``min(t_comm, t_compute)`` per round, so the tuner sees both
 the convergence tax and the overlap payoff.
 
+``--codec int8|int4`` runs the exchange through the compressed
+transport with that wire codec (``comm_scheme="compressed:<codec>"``):
+rounds-to-eps is measured on the actual quantized trajectories and the
+time model charges the codec's smaller wire bytes, so the tuner sees
+both sides of the compression trade too.
+
   PYTHONPATH=src python examples/tune_h.py
   PYTHONPATH=src python examples/tune_h.py --mode stale --bandwidth 1e8
+  PYTHONPATH=src python examples/tune_h.py --codec int4 --bandwidth 1e8
 """
 import argparse
 import functools
@@ -31,16 +38,26 @@ ap.add_argument("--mode", choices=("sync", "stale"), default="sync",
 ap.add_argument("--bandwidth", type=float, default=1e9,
                 help="synthetic link bandwidth in B/s for the comm term "
                      "(default 1 GB/s)")
+ap.add_argument("--codec", choices=("f32", "int8", "int4"), default="f32",
+                help="wire codec for the update exchange: f32 keeps the "
+                     "exact persistent psum; int8/int4 run the "
+                     "compressed transport with that codec")
 args = ap.parse_args()
+SCHEME = ("persistent" if args.codec == "f32"
+          else f"compressed:{args.codec}")
 
 A, b, _ = make_glm_data(m=256, n=768, density=0.2, seed=4)
-EPS = 1e-3
+# the target tolerance follows the codec's quantization noise floor:
+# int8's absmax grid converges through 1e-3 on this problem, int4's
+# ~17x-coarser grid plateaus near 2e-2, so its tuner runs at the
+# coarse tolerance the codec can actually reach
+EPS = {"f32": 1e-3, "int8": 1e-3, "int4": 5e-2}[args.codec]
 H_REF = 96
 
 # Measure the solver-cost slope once (seconds per local SCD step) at the
 # reference point; the model extrapolates linearly in H, which is exact
 # for this solver (H sequential coordinate steps).
-_tr = CoCoATrainer(CoCoAConfig(K=8, H=H_REF, seed=0,
+_tr = CoCoATrainer(CoCoAConfig(K=8, H=H_REF, seed=0, comm_scheme=SCHEME,
                                exchange_mode=args.mode), A, b)
 T_PER_STEP = measure_solver_time(_tr, H_REF, reps=3) / H_REF
 T_REF = T_PER_STEP * H_REF
@@ -48,13 +65,13 @@ COMM_BYTES = _tr.comm_bytes_per_round()
 LINK = synthetic_link(args.bandwidth, 1e-4)
 print(f"measured solver cost: {T_PER_STEP * 1e6:.2f} us/step "
       f"(t_ref={T_REF * 1e3:.2f} ms at H={H_REF}); mode={args.mode}, "
-      f"{COMM_BYTES} B/round over a "
+      f"scheme={SCHEME}, {COMM_BYTES} B/round over a "
       f"{args.bandwidth / 1e9:.2f} GB/s link")
 
 
 @functools.lru_cache(maxsize=64)
 def rounds_to_eps(H: int):
-    tr = CoCoATrainer(CoCoAConfig(K=8, H=H, seed=0,
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=H, seed=0, comm_scheme=SCHEME,
                                   exchange_mode=args.mode), A, b)
     return tr.run(800, record_every=1, target_eps=EPS).rounds_to(EPS)
 

@@ -1,0 +1,12 @@
+"""Pluggable update-codec layer for the distributed exchange.
+
+The paper's central lever is shrinking per-round communication cost
+relative to compute (§5.3-§5.5). The ``compressed`` comm scheme used to
+hardcode one int8 path inside ``core/distributed.py``; this package
+factors the *what travels on the wire* question out of the *which
+collective moves it* question, so a ``CommScheme`` composes as
+transport x codec (``"compressed:int4"``) instead of growing one
+special case per compression trick.
+"""
+from repro.comm.codec import (CODECS, F32Codec, Int4Codec,  # noqa: F401
+                              Int8Codec, UpdateCodec, get_codec)

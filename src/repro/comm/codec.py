@@ -1,0 +1,218 @@
+"""Update codecs: what one worker's update vector looks like on the wire.
+
+An :class:`UpdateCodec` turns a 1-D f32 update into a tuple of *wire
+arrays* (``encode``), reconstructs the f32 vector from a stacked
+``(K, ...)`` gather of those arrays (``decode_stacked``), and prices the
+per-worker payload (``wire_bytes``). The comm schemes in
+``core/distributed.py`` all-gather every wire array and sum the decoded
+stack — both the vmap virtual driver and the shard_map sharded driver
+call the ONE codec object, so the two execution paths cannot drift.
+
+Three codecs:
+
+  * ``f32``  — identity: the update travels as-is (4 bytes/element).
+    No scale array, so the wire tuple is just ``(dv,)`` and the HLO
+    shows a single f32 all-gather.
+  * ``int8`` — absmax quantization to [-127, 127] with one f32 scale
+    per worker (1 byte/element + 4). This is the quantizer that used to
+    live in ``core/distributed.py`` verbatim: for any nonzero input the
+    encode/decode bits are identical to the pre-codec ``compressed``
+    scheme (pinned by a regression test).
+  * ``int4`` — absmax quantization to [-7, 7] packed two elements per
+    byte (0.5 bytes/element + 4). The grid has 15 levels across
+    [-absmax, absmax] (``scale = absmax / 7.5``, i.e. steps of
+    2*absmax/15), so the round-trip error bound is ``scale / 2`` —
+    about 8.5x the int8 codec's scale. Packing pairs element ``i`` with
+    element ``i + ceil(L/2)`` (split-half pairing): pack and unpack are
+    then pure elementwise nibble ops on two contiguous halves, with no
+    strided gathers — the layout a TPU kernel can fuse.
+
+Zero is a guaranteed fixed point of every codec: the quantized grids
+are symmetric and contain 0, and the scale is explicitly guarded
+(``scale = 1`` when ``absmax == 0``) so an all-zero update decodes to
+exact zeros by construction, not by luck of ``0 / eps`` rounding.
+
+On TPU the int8/int4 ``encode`` dispatches to the fused Pallas
+quantize+pack kernel (``repro.kernels.quant``) so absmax-scale, round,
+clip and pack happen in one VMEM pass instead of materializing f32
+intermediates in HBM; everywhere else it runs the jnp path below, which
+doubles as the kernel's bit-exact oracle.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import compat
+
+FP_ITEMSIZE = 4        # every dense array in the system is float32
+SCALE_BYTES = 4        # one f32 absmax scale per worker per round
+
+INT8_QMAX = 127.0      # int8 grid: 255 levels across [-absmax, absmax]
+INT4_QMAX = 7.0        # int4 grid: 15 levels (q in [-7, 7]; -8 unused
+#                        so the grid stays symmetric and contains 0)
+INT4_SCALE_DIV = 7.5   # scale = absmax/7.5 -> steps of 2*absmax/15;
+#                        interior elements round to within scale/2, and
+#                        the absmax element itself sits at dv/scale =
+#                        7.5 exactly — round-half-even takes it to 8,
+#                        the clip pulls it back to 7, and the resulting
+#                        error is |7.5-7|*scale = scale/2: the clip DOES
+#                        bite there, landing exactly on the bound, so
+#                        the round-trip error is <= scale/2 everywhere
+#                        (tight at the extreme, not slack)
+
+
+@runtime_checkable
+class UpdateCodec(Protocol):
+    """What a codec plugs into the comm schemes and the byte model.
+
+    ``encode``         one worker's 1-D f32 update -> tuple of wire
+                       arrays (payload first; a per-worker f32 scale
+                       follows when the codec has one).
+    ``decode``         the wire tuple of ONE worker -> the f32 vector.
+    ``decode_stacked`` the all-gathered ``(K, ...)`` wire tuple -> the
+                       ``(K, L)`` f32 stack the exchange sums.
+    ``wire_bytes``     per-worker payload bytes for a length-L update —
+                       the number the byte model charges and the
+                       ``drivers`` benchmark checks against the HLO.
+    """
+    name: str
+
+    def encode(self, dv: jax.Array) -> tuple[jax.Array, ...]: ...
+
+    def decode(self, parts, length: int) -> jax.Array: ...
+
+    def decode_stacked(self, parts, length: int) -> jax.Array: ...
+
+    def wire_bytes(self, length: int) -> int: ...
+
+
+def _absmax_scale(dv: jax.Array, div: float, eps: float) -> jax.Array:
+    """Per-vector absmax scale with the explicit zero guard: an all-zero
+    input gets scale 1 (any finite value works — q is 0 everywhere), so
+    ``decode(encode(0)) == 0`` exactly instead of relying on ``0 / eps``
+    rounding to zero."""
+    absmax = jnp.max(jnp.abs(dv))
+    return jnp.where(absmax > 0, absmax / div + eps, 1.0)
+
+
+def _split_halves(dv: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) halves of the zero-padded-to-even vector: element ``i``
+    pairs with element ``i + ceil(L/2)``."""
+    L = dv.shape[0]
+    half = -(-L // 2)
+    dv = jnp.concatenate([dv, jnp.zeros((2 * half - L,), dv.dtype)])
+    return dv[:half], dv[half:]
+
+
+class F32Codec:
+    """Identity codec: the f32 update IS the wire format."""
+    name = "f32"
+
+    def encode(self, dv: jax.Array) -> tuple[jax.Array]:
+        return (dv,)
+
+    def decode(self, parts, length: int) -> jax.Array:
+        return parts[0]
+
+    def decode_stacked(self, parts, length: int) -> jax.Array:
+        return parts[0]
+
+    def wire_bytes(self, length: int) -> int:
+        return length * FP_ITEMSIZE
+
+
+class Int8Codec:
+    """Absmax int8 quantization with a per-worker f32 scale — byte-for-
+    byte the quantizer the ``compressed`` scheme always used (the
+    ``+ 1e-30`` term is kept so nonzero inputs quantize identically to
+    the pre-codec implementation; the zero guard only changes the
+    never-observable scale of an all-zero vector)."""
+    name = "int8"
+
+    def encode(self, dv: jax.Array) -> tuple[jax.Array, jax.Array]:
+        if compat.on_tpu():
+            from repro.kernels.quant import quantize_pack_int8
+            return quantize_pack_int8(dv)
+        return self.encode_ref(dv)
+
+    def encode_ref(self, dv: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """The jnp path (and the Pallas kernel's bit-exact oracle)."""
+        scale = _absmax_scale(dv, INT8_QMAX, 1e-30)
+        q = jnp.clip(jnp.round(dv / scale), -INT8_QMAX,
+                     INT8_QMAX).astype(jnp.int8)
+        return q, scale
+
+    def decode(self, parts, length: int) -> jax.Array:
+        q, scale = parts
+        return q.astype(jnp.float32) * scale
+
+    def decode_stacked(self, parts, length: int) -> jax.Array:
+        q, scale = parts                     # (K, L), (K,)
+        return q.astype(jnp.float32) * scale[:, None]
+
+    def wire_bytes(self, length: int) -> int:
+        return length + SCALE_BYTES
+
+
+class Int4Codec:
+    """Absmax int4 quantization, two elements per byte.
+
+    ``q = clip(round(dv / scale), -7, 7)`` with ``scale = absmax/7.5``;
+    nibbles are stored biased (``q + 8`` in [1, 15]) and packed
+    ``lo | hi << 4`` under split-half pairing, so pack/unpack are
+    elementwise on contiguous halves. Wire cost: ``ceil(L/2)`` payload
+    bytes + the 4-byte scale.
+    """
+    name = "int4"
+
+    def encode(self, dv: jax.Array) -> tuple[jax.Array, jax.Array]:
+        if compat.on_tpu():
+            from repro.kernels.quant import quantize_pack_int4
+            return quantize_pack_int4(dv)
+        return self.encode_ref(dv)
+
+    def encode_ref(self, dv: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """The jnp path (and the Pallas kernel's bit-exact oracle)."""
+        scale = _absmax_scale(dv, INT4_SCALE_DIV, 0.0)
+        lo, hi = _split_halves(dv)
+        qlo = jnp.clip(jnp.round(lo / scale), -INT4_QMAX,
+                       INT4_QMAX).astype(jnp.int32) + 8
+        qhi = jnp.clip(jnp.round(hi / scale), -INT4_QMAX,
+                       INT4_QMAX).astype(jnp.int32) + 8
+        return (qlo | (qhi << 4)).astype(jnp.uint8), scale
+
+    def _unpack(self, packed: jax.Array, length: int) -> jax.Array:
+        """(..., ceil(L/2)) packed bytes -> (..., L) f32-ready int grid
+        values in [-7, 7] (the padded tail nibble is sliced off)."""
+        p = packed.astype(jnp.int32)
+        q = jnp.concatenate([p & 0xF, p >> 4], axis=-1) - 8
+        return q[..., :length].astype(jnp.float32)
+
+    def decode(self, parts, length: int) -> jax.Array:
+        packed, scale = parts
+        return self._unpack(packed, length) * scale
+
+    def decode_stacked(self, parts, length: int) -> jax.Array:
+        packed, scale = parts                # (K, L2), (K,)
+        return self._unpack(packed, length) * scale[:, None]
+
+    def wire_bytes(self, length: int) -> int:
+        return -(-length // 2) + SCALE_BYTES
+
+
+CODECS: dict[str, UpdateCodec] = {
+    c.name: c for c in (F32Codec(), Int8Codec(), Int4Codec())
+}
+
+
+def get_codec(name: str) -> UpdateCodec:
+    """Validated codec lookup (raises on typos instead of silently
+    falling back to the identity)."""
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown update codec {name!r}; "
+                         f"known: {tuple(CODECS)}") from None

@@ -5,7 +5,8 @@ communication/computation trade-off machinery (the H knob)."""
 from repro.core.glm import GLMProblem, primal_objective, ridge_exact, suboptimality  # noqa: F401
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer  # noqa: F401
 from repro.core.baselines import MinibatchSCD, MinibatchSGD, SGDConfig  # noqa: F401
-from repro.core.distributed import (COMM_SCHEMES, EXCHANGE_MODES,  # noqa: F401
-                                    CommScheme, ExchangeMode, get_mode,
-                                    get_scheme)
+from repro.core.distributed import (COMM_SCHEMES, COMM_TRANSPORTS,  # noqa: F401
+                                    EXCHANGE_MODES, CommScheme, ExchangeMode,
+                                    get_mode, get_scheme)
+from repro.comm import CODECS, UpdateCodec, get_codec  # noqa: F401
 from repro.core.overheads import OverheadProfile, PROFILES  # noqa: F401

@@ -7,8 +7,9 @@ CoCoA, mini-batch SCD, and mini-batch SGD. That comparison is only
 meaningful when every algorithm runs under the same communication
 substrate, so this module factors it out:
 
-  * :class:`CommScheme` — the paper's communication schemes plus two
-    beyond-paper variants
+  * :class:`CommScheme` — a *transport* (which collective moves the
+    update) composed with an *update codec* (what one worker's update
+    looks like on the wire, ``repro.comm``). Transports:
 
       - ``persistent``      per-worker state lives on its worker across
         rounds (the paper's "persistent local memory" / (B)*, (D)*
@@ -18,18 +19,24 @@ substrate, so this module factors it out:
         locally instead of psum'd, and per-worker persistent state is
         all-gathered and re-sliced — mathematically the identity, but
         the extra collective traffic is real and visible in the HLO.
-      - ``compressed``      beyond-paper: int8-quantized updates (4x
-        less traffic than f32) with a per-worker absmax scale travelling
-        as a tiny f32 alongside; dequant + sum happens locally.
+      - ``compressed``      beyond-paper: each worker's update is
+        codec-encoded before the all-gather and decoded + summed
+        locally. The codec is named after a colon — ``compressed:int8``
+        (absmax int8 + f32 scale, 4x less traffic than f32),
+        ``compressed:int4`` (two elements per byte, ~8x), or
+        ``compressed:f32`` (the identity codec — the bare transport).
+        Bare ``"compressed"`` aliases ``compressed:int8``, so every
+        pre-codec config keeps its exact behavior.
       - ``reduce_scatter``  beyond-paper: the update exchange as an
         explicit ``psum_scatter`` + ``all_gather`` pair (the classic
         ring decomposition of all-reduce) — each worker moves only
         2·(K-1)/K of the update vector each way instead of the full
         vector, the cheapest exact f32 exchange on a ring.
 
-    with the ONE shared quantize/dequantize pair (both execution drivers
-    call it, so they cannot drift) and byte accounting sized to what the
-    collectives actually move (int8 for ``compressed``, f32 otherwise).
+    Both execution drivers call the ONE codec object (so they cannot
+    drift) and the byte accounting is sized to what the collectives
+    actually move (``codec.wire_bytes`` per worker each way — int8/int4
+    payloads + the 4-byte scale under ``compressed``, f32 otherwise).
 
   * :class:`ExchangeMode` — the *staleness* axis, orthogonal to the
     scheme (paper §4-§5: Spark's scheduling delay makes workers compute
@@ -78,29 +85,33 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm import UpdateCodec, get_codec
 from repro.utils import compat
 
-COMM_SCHEMES = ("persistent", "spark_faithful", "compressed",
-                "reduce_scatter")
+# the transports; ``compressed`` composes with a codec suffix — the
+# canonical sweep set keeps the bare aliases (compressed == :int8)
+COMM_TRANSPORTS = ("persistent", "spark_faithful", "compressed",
+                   "reduce_scatter")
+COMM_SCHEMES = COMM_TRANSPORTS
 EXCHANGE_MODES = ("sync", "stale")
 
 FP_ITEMSIZE = 4        # every dense array in the system is float32
-INT8_ITEMSIZE = 1
-QUANT_SCALE_BYTES = 4  # one f32 absmax scale per worker per round
 
 
 # ---------------------------------------------------------------------------
-# shared int8 quantization — the single source of truth for BOTH drivers
+# back-compat shims for the pre-codec quantizer API — the single int8
+# source of truth now lives in repro.comm.codec; both drivers reach it
+# through the scheme's codec object
 # ---------------------------------------------------------------------------
 def quantize_update(dv: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Absmax int8 quantization of one worker's update vector.
+    """Absmax int8 quantization of one worker's update vector
+    (``Int8Codec.encode``: the jnp oracle off TPU, the fused Pallas
+    quantize+pack kernel on TPU).
 
     Returns ``(q, scale)`` with ``q`` int8 in [-127, 127] and ``scale``
     a scalar f32 such that ``dequantize_update(q, scale) ~= dv``.
     """
-    scale = jnp.max(jnp.abs(dv)) / 127.0 + 1e-30
-    q = jnp.clip(jnp.round(dv / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return get_codec("int8").encode(dv)
 
 
 def dequantize_update(q: jax.Array, scale: jax.Array) -> jax.Array:
@@ -112,35 +123,57 @@ def dequantize_update(q: jax.Array, scale: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class CommScheme:
-    """One of the paper's communication schemes (§5.3) + the compressed
-    beyond-paper variant. Carries both the collective mechanics (used
-    inside the round drivers) and the byte accounting for the overhead
-    model, so modelled traffic cannot drift from what is actually moved.
+    """One of the paper's communication schemes (§5.3) as transport x
+    codec — ``name`` is ``"<transport>"`` or ``"compressed:<codec>"``
+    (bare ``"compressed"`` aliases ``compressed:int8``). Carries both
+    the collective mechanics (used inside the round drivers) and the
+    byte accounting for the overhead model, so modelled traffic cannot
+    drift from what is actually moved.
     """
     name: str
 
     def __post_init__(self):
-        if self.name not in COMM_SCHEMES:
+        transport, _, codec = self.name.partition(":")
+        if transport not in COMM_TRANSPORTS:
             raise ValueError(f"unknown comm scheme {self.name!r}; "
-                             f"known: {COMM_SCHEMES}")
+                             f"known transports: {COMM_TRANSPORTS} "
+                             f"(codecs compose as 'compressed:<codec>')")
+        if codec:
+            if transport != "compressed":
+                raise ValueError(
+                    f"comm scheme {self.name!r}: only the 'compressed' "
+                    f"transport takes a codec suffix ('{transport}' "
+                    f"moves exact f32 by construction)")
+            get_codec(codec)  # raises on unknown codec names
+
+    @property
+    def transport(self) -> str:
+        return self.name.partition(":")[0]
+
+    @property
+    def codec(self) -> UpdateCodec:
+        """The wire codec this scheme's exchange runs through: the named
+        one for ``compressed`` (int8 when bare — the pre-codec default),
+        the f32 identity for every exact-f32 transport."""
+        transport, _, codec = self.name.partition(":")
+        if transport == "compressed":
+            return get_codec(codec or "int8")
+        return get_codec("f32")
 
     @property
     def persistent_local_state(self) -> bool:
         """May per-worker state (e.g. alpha_[k]) stay device-resident?"""
-        return self.name != "spark_faithful"
-
-    @property
-    def update_itemsize(self) -> int:
-        return INT8_ITEMSIZE if self.name == "compressed" else FP_ITEMSIZE
+        return self.transport != "spark_faithful"
 
     # -- aggregation inside shard_map (per-shard view) ---------------------
     def all_reduce(self, update: jax.Array, axis: str) -> jax.Array:
         """Sum the per-worker 1-D update across the mesh axis."""
-        if self.name == "compressed":
-            q, scale = quantize_update(update)
-            qs = lax.all_gather(q, axis)            # (K, L) int8
-            ss = lax.all_gather(scale, axis)        # (K,)  f32
-            return jnp.sum(dequantize_update(qs, ss[:, None]), axis=0)
+        if self.transport == "compressed":
+            parts = self.codec.encode(update)       # e.g. ((L,) int8, scale)
+            gathered = tuple(lax.all_gather(p, axis) for p in parts)
+            return jnp.sum(
+                self.codec.decode_stacked(gathered, update.shape[0]),
+                axis=0)
         if self.name == "spark_faithful":
             # collected at the master and re-broadcast, not reduced
             # in-place — identity, but the traffic is real.
@@ -162,9 +195,11 @@ class CommScheme:
 
     # -- aggregation over stacked (K, L) updates (virtual driver) ----------
     def all_reduce_stacked(self, updates: jax.Array) -> jax.Array:
-        if self.name == "compressed":
-            q, scale = jax.vmap(quantize_update)(updates)
-            return jnp.sum(dequantize_update(q, scale[:, None]), axis=0)
+        if self.transport == "compressed":
+            parts = jax.vmap(self.codec.encode)(updates)
+            return jnp.sum(
+                self.codec.decode_stacked(parts, updates.shape[1]),
+                axis=0)
         return jnp.sum(updates, axis=0)
 
     # -- persistent-state round trip (sharded driver only) -----------------
@@ -184,22 +219,21 @@ class CommScheme:
         """Bytes on the wire per round (paper Fig 1 + §5.3), sized to
         the dtypes the collectives actually move.
 
-        Master-centric schemes: K workers send their ``update_len``-
-        vector up and receive the aggregate back (f32, or int8 + a
-        4-byte f32 scale under ``compressed``). ``spark_faithful``
-        additionally ships the ``local_state_len`` total elements of
-        per-worker persistent state up and down in f32.
-        ``reduce_scatter`` has no master: each worker moves
-        (K-1)/K of the (K-padded) update each way on the ring —
-        ``2*(K-1)*len_pad*4`` bytes in total.
+        Master-centric schemes: K workers send their codec-encoded
+        ``update_len``-vector up and receive the aggregate back —
+        ``codec.wire_bytes`` per worker each way (f32 4B/element for
+        the exact transports; int8 1B/element or int4 packed
+        ceil(len/2) bytes, + the 4-byte f32 scale, under
+        ``compressed``). ``spark_faithful`` additionally ships the
+        ``local_state_len`` total elements of per-worker persistent
+        state up and down in f32. ``reduce_scatter`` has no master:
+        each worker moves (K-1)/K of the (K-padded) update each way on
+        the ring — ``2*(K-1)*len_pad*4`` bytes in total.
         """
-        if self.name == "reduce_scatter":
+        if self.transport == "reduce_scatter":
             len_pad = -(update_len // -K) * K
             return 2 * (K - 1) * len_pad * FP_ITEMSIZE
-        if self.name == "compressed":
-            v = 2 * K * (update_len * INT8_ITEMSIZE + QUANT_SCALE_BYTES)
-        else:
-            v = 2 * K * update_len * FP_ITEMSIZE
+        v = 2 * K * self.codec.wire_bytes(update_len)
         a = (0 if self.persistent_local_state
              else 2 * local_state_len * FP_ITEMSIZE)
         return v + a

@@ -1,5 +1,10 @@
 # The paper's compute hot-spot is the local SCD solver, which it
 # offloads to optimized native (C++) modules — here that role is played
-# by a Pallas TPU kernel (scd.py) with a pure-jnp oracle (ref.py).
+# by a Pallas TPU kernel (scd.py) with a pure-jnp oracle (ref.py). The
+# other hot path is the compressed exchange's wire encode, fused by the
+# quantize+pack kernel (quant.py) whose oracle is the codec layer.
 from repro.kernels.ops import scd_steps_kernel  # noqa: F401
-from repro.kernels.ref import scd_steps_ref  # noqa: F401
+from repro.kernels.quant import (quantize_pack_int4,  # noqa: F401
+                                 quantize_pack_int8)
+from repro.kernels.ref import (quantize_pack_int4_ref,  # noqa: F401
+                               quantize_pack_int8_ref, scd_steps_ref)

@@ -12,10 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.scd import scd_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.utils import compat
 
 
 @functools.partial(jax.jit,
@@ -30,8 +27,7 @@ def scd_steps_kernel(A_k: jax.Array, col_sq: jax.Array, alpha_k: jax.Array,
       A_k (m, n_local), col_sq (n_local,), alpha_k (n_local,), w (m,),
       idx (H,) int32  ->  (delta_v (m,), alpha_new (n_local,)).
     """
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = compat.default_interpret(interpret)
     H = idx.shape[0]
     h_blk = min(h_blk, H)
     pad = (-H) % h_blk

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused absmax quantize + nibble pack for the
+``compressed`` exchange's wire codecs.
+
+The jnp encode path (``repro.comm.codec``, the oracle) lowers to a
+chain of HBM-materialized f32 intermediates — ``abs``, the scaled
+vector, the rounded vector, the clipped vector — before the cast and
+(for int4) the pack. At update-vector scale that is 4-5 redundant HBM
+round-trips for what is one streaming pass of VPU work. This kernel
+keeps the whole update resident in VMEM and does absmax-reduce, scale,
+round, clip, bias and pack in a single grid step:
+
+  * int8: (1, L) f32 in -> (1, L) int8 + (1, 1) f32 scale out.
+  * int4: (2, L/2) f32 in (the codec's split-half pairing: element i
+    pairs with element i + L/2, so "pack" is an elementwise
+    ``lo | hi << 4`` of the two sublane rows — no strided gathers) ->
+    (1, L/2) uint8 + (1, 1) f32 scale out.
+
+The wrappers pad the lane dimension to 128 with zeros (absmax is
+unaffected; padded elements quantize to the zero nibble and are sliced
+off), run compiled on TPU and in interpret mode everywhere else — the
+same convention as ``scd_pallas`` — and are bit-identical to the
+codec's ``encode_ref`` oracle (pinned by tests and the ``kernels``
+benchmark).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.comm.codec import INT4_QMAX, INT4_SCALE_DIV, INT8_QMAX
+from repro.utils import compat
+
+_LANE = 128  # TPU lane width: pad the streamed dimension to a multiple
+
+
+def _quant_int8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax / INT8_QMAX + 1e-30, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -INT8_QMAX,
+                          INT8_QMAX).astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _quant_int4_kernel(x_ref, p_ref, s_ref):
+    x = x_ref[...]                                   # (2, half)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax / INT4_SCALE_DIV, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -INT4_QMAX,
+                 INT4_QMAX).astype(jnp.int32) + 8    # biased nibbles
+    p_ref[...] = (q[0:1, :] | (q[1:2, :] << 4)).astype(jnp.uint8)
+    s_ref[0, 0] = scale
+
+
+def _pad_lanes(x: jax.Array) -> jax.Array:
+    pad = -x.shape[-1] % _LANE
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_pack_int8(dv: jax.Array, *, interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Fused int8 encode of a 1-D f32 update: ``(q (L,) int8, scale)``,
+    bit-identical to ``Int8Codec.encode_ref``."""
+    interpret = compat.default_interpret(interpret)
+    L = dv.shape[0]
+    x = _pad_lanes(dv.astype(jnp.float32))[None, :]
+    q, scale = pl.pallas_call(
+        _quant_int8_kernel,
+        out_shape=[jax.ShapeDtypeStruct(x.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return q[0, :L], scale[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_pack_int4(dv: jax.Array, *, interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Fused int4 encode of a 1-D f32 update: ``(packed (ceil(L/2),)
+    uint8, scale)``, bit-identical to ``Int4Codec.encode_ref``."""
+    interpret = compat.default_interpret(interpret)
+    L = dv.shape[0]
+    half = -(-L // 2)
+    dv = dv.astype(jnp.float32)
+    dv = jnp.concatenate([dv, jnp.zeros((2 * half - L,), dv.dtype)])
+    x = _pad_lanes(dv.reshape(2, half))              # split-half rows
+    packed, scale = pl.pallas_call(
+        _quant_int4_kernel,
+        out_shape=[jax.ShapeDtypeStruct((1, x.shape[1]), jnp.uint8),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return packed[0, :half], scale[0, 0]

@@ -1,8 +1,14 @@
-"""Pure-jnp oracle for the Pallas SCD kernel.
+"""Pure-jnp oracles for the Pallas kernels.
 
-The contract is identical to ``repro.core.solvers.scd_steps`` (which is
-the algorithmic source of truth); re-exported here so kernel tests and
-benchmarks depend only on ``repro.kernels``.
+The contracts are identical to the algorithmic sources of truth —
+``repro.core.solvers.scd_steps`` for the SCD solver and the
+``repro.comm.codec`` encode paths for the fused quantize+pack kernel —
+re-exported here so kernel tests and benchmarks depend only on
+``repro.kernels``.
 """
+from repro.comm.codec import CODECS as _CODECS
 from repro.core.solvers import scd_steps as scd_steps_ref  # noqa: F401
 from repro.core.solvers import soft_threshold  # noqa: F401
+
+quantize_pack_int8_ref = _CODECS["int8"].encode_ref
+quantize_pack_int4_ref = _CODECS["int4"].encode_ref

@@ -2,12 +2,15 @@
 --dry-run for the production-mesh lowering.
 
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
-      --reduced --steps 200 --batch 8 --seq 256 [--local-H 4]
+      --reduced --steps 200 --batch 8 --seq 256 [--local-H 4] [--codec int8]
 
 On this CPU container use --reduced; on a real TPU slice the full config
 shards according to launch/sharding.py. --local-H enables the paper's
 communication-avoiding local-update rounds (H optimizer steps per
-parameter sync) with the roofline-driven default when set to 0.
+parameter sync) with the roofline-driven default when set to 0;
+--codec picks the wire codec for the delta exchange (f32 exact pmean,
+int8/int4 the compressed exchange — active when the round runs over a
+data-parallel mesh axis).
 """
 from __future__ import annotations
 
@@ -37,6 +40,9 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--local-H", type=int, default=None,
                     help="local steps per sync (paper's knob); 0=auto")
+    ap.add_argument("--codec", choices=("f32", "int8", "int4"),
+                    default="f32",
+                    help="wire codec for the local-update delta exchange")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -56,7 +62,14 @@ def main() -> None:
         print(f"auto-selected local H = {H}")
     if H and H > 1:
         step_local = make_train_step(model, opt_cfg)
-        lu_cfg = LocalUpdatesConfig(H=H)
+        lu_cfg = LocalUpdatesConfig(H=H, codec=args.codec)
+        if args.codec != "f32":
+            from repro.optim import delta_wire_bytes
+            K = max(len(jax.devices()), 1)
+            print(f"delta exchange codec={args.codec}: "
+                  f"~{delta_wire_bytes(params, lu_cfg, K) / 1e6:.2f} MB "
+                  f"modelled per sync across {K} shard(s) "
+                  f"(vs {delta_wire_bytes(params, LocalUpdatesConfig(H=H), K) / 1e6:.2f} MB f32)")
 
         @jax.jit
         def round_fn(params, opt, batches):

@@ -12,6 +12,17 @@ H = 1 with SGD is exactly synchronous data-parallel (property-tested);
 larger H trades gradient staleness for an H-fold reduction in collective
 traffic, profitable exactly when the roofline collective term dominates
 (see ``suggest_H``).
+
+Orthogonal to H, ``LocalUpdatesConfig.codec`` picks the wire codec for
+the delta exchange (``repro.comm``): ``f32`` keeps the exact ``pmean``;
+``int8``/``int4`` quantize each leaf's delta per shard (absmax scale,
+the same codecs — and on TPU the same fused Pallas quantize+pack
+kernel — as the linear solvers' ``compressed`` comm scheme), all-gather
+the encoded payloads, and decode + mean locally. Deltas after H small
+steps are the natural thing to quantize — their dynamic range is tiny
+next to the parameters', so the absmax grid is fine where quantizing
+raw params would not be; ``average="params"`` therefore rejects a
+non-identity codec.
 """
 from __future__ import annotations
 
@@ -21,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.comm import get_codec
+
 
 @dataclass(frozen=True)
 class LocalUpdatesConfig:
@@ -28,6 +41,39 @@ class LocalUpdatesConfig:
     average: str = "delta"     # delta | params  (identical result; delta
     #                            keeps the psum operand small vs donated p0)
     sync_opt_state: bool = True
+    codec: str = "f32"         # wire codec for the delta exchange
+
+    def __post_init__(self):
+        get_codec(self.codec)  # fail loudly on typos
+        if self.codec != "f32" and self.average != "delta":
+            raise ValueError(
+                f"codec={self.codec!r} requires average='delta': the "
+                f"absmax grid is sized to the small per-round deltas — "
+                f"quantizing full parameters would be lossy at a "
+                f"completely different magnitude")
+
+
+def delta_wire_bytes(params, cfg: LocalUpdatesConfig, K: int) -> int:
+    """Modelled bytes on the wire for ONE delta exchange across K data
+    shards — ``2 * K * codec.wire_bytes(leaf_len)`` summed over leaves
+    (each shard sends its encoded delta up and receives the K-stack
+    back), the same accounting the linear drivers' ``compressed``
+    scheme uses. Opt-state sync (always f32) is not included."""
+    codec = get_codec(cfg.codec)
+    return sum(2 * K * codec.wire_bytes(leaf.size)
+               for leaf in jax.tree_util.tree_leaves(params))
+
+
+def _codec_mean(delta: jax.Array, codec, axis_name: str) -> jax.Array:
+    """The compressed replacement for ``lax.pmean`` on one f32 leaf:
+    encode this shard's delta, all-gather the wire arrays, decode the
+    (K, L) stack locally and average it — the exact collective shape
+    (and byte cost) of the linear drivers' ``compressed`` exchange."""
+    flat = delta.reshape(-1)
+    parts = codec.encode(flat)
+    gathered = tuple(lax.all_gather(p, axis_name) for p in parts)
+    dec = codec.decode_stacked(gathered, flat.shape[0])   # (K, L)
+    return jnp.mean(dec, axis=0).reshape(delta.shape)
 
 
 def local_updates_round(step_fn, params, opt_state, batches,
@@ -55,7 +101,12 @@ def local_updates_round(step_fn, params, opt_state, batches,
             delta = jax.tree.map(
                 lambda a, b: (a.astype(jnp.float32)
                               - b.astype(jnp.float32)), pH, p0)
-            delta = lax.pmean(delta, axis_name)
+            if cfg.codec == "f32":
+                delta = lax.pmean(delta, axis_name)
+            else:
+                codec = get_codec(cfg.codec)
+                delta = jax.tree.map(
+                    lambda d: _codec_mean(d, codec, axis_name), delta)
             pH = jax.tree.map(lambda p, d: (p.astype(jnp.float32)
                                             + d).astype(p.dtype), p0, delta)
         else:
@@ -84,4 +135,6 @@ def suggest_H(t_compute_per_step: float, t_collective_per_sync: float,
            and t_collective_per_sync / H > staleness_budget
            * max(t_compute_per_step, 1e-12)):
         H *= 2
-    return H
+    # the doubling loop can overshoot a non-power-of-two cap (max_H=48
+    # used to return 64): max_H is a hard ceiling, so clamp
+    return min(H, max_H)

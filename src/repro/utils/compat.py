@@ -11,6 +11,19 @@ from __future__ import annotations
 import jax
 
 
+def on_tpu() -> bool:
+    """Whether the default backend is a real TPU — the one shared
+    switch for every Pallas kernel entry point (``kernels/ops.py``,
+    ``kernels/quant.py``) and for codec dispatch."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel wrapper's ``interpret=None`` default: compiled
+    on TPU, interpret-mode emulation everywhere else."""
+    return not on_tpu() if interpret is None else interpret
+
+
 def make_mesh(axis_shapes, axis_names):
     """``jax.make_mesh`` with Auto axis types where supported."""
     if hasattr(jax.sharding, "AxisType"):

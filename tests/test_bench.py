@@ -182,16 +182,21 @@ def test_smoke_tier_end_to_end(tmp_path):
         assert loaded.timings_s, name
         assert loaded.env.device_count >= 1
     # drivers must cover the full matrix: 3 algorithms x both execution
-    # drivers x all four comm schemes x both exchange modes (48 rows —
-    # the 24 modelled-bytes cells each run on both drivers)
+    # drivers x every transport-x-codec scheme x both exchange modes
+    # (72 rows — the 36 modelled-bytes cells each run on both drivers)
     got = {(r["algorithm"], r["driver"], r["scheme"], r["mode"])
            for r in by["drivers"].rows}
     assert got == {(a, d, s, m)
                    for a in ("cocoa", "minibatch_scd", "minibatch_sgd")
                    for d in ("virtual", "sharded")
-                   for s in ("persistent", "spark_faithful", "compressed",
-                             "reduce_scatter")
+                   for s in ("persistent", "spark_faithful",
+                             "compressed:f32", "compressed:int8",
+                             "compressed:int4", "reduce_scatter")
                    for m in ("sync", "stale")}
+    # every compressed row is labelled with its codec
+    assert {r["codec"] for r in by["drivers"].rows
+            if r["scheme"].startswith("compressed")} == {"f32", "int8",
+                                                         "int4"}
     # every cell reports modelled bytes sized to the scheme's dtypes —
     # except reduce_scatter on a single-device mesh, whose ring volume
     # 2*(K-1)/K*len is genuinely zero at K=1

@@ -107,6 +107,10 @@ def test_comm_bytes_match_scheme_dtypes(problem_data):
     assert (by["spark_faithful"].comm_bytes_per_round()
             == 2 * K * m * 4 + 2 * K * n_pad * 4)
     assert by["compressed"].comm_bytes_per_round() == 2 * K * (m + 4)
+    # codec-composed schemes: the transport is priced per wire codec
+    int4 = CoCoATrainer(CoCoAConfig(K=K, comm_scheme="compressed:int4"),
+                        A, b)
+    assert int4.comm_bytes_per_round() == 2 * K * (-(-m // 2) + 4)
     sgd = {s: MinibatchSGD(SGDConfig(K=K, comm_scheme=s), A, b)
            for s in COMM_SCHEMES}
     assert sgd["persistent"].comm_bytes_per_round() == 2 * K * n * 4

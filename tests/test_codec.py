@@ -1,0 +1,139 @@
+"""The update-codec layer's non-numeric contracts: scheme parsing
+(transport x codec composition), wire-byte formulas, config validation,
+the trade-off-layer threading, and the suggest_H cap regression.
+
+The numeric round-trip/bit-identity properties live in
+tests/test_distributed.py (the hypothesis/fallback battery over all
+codecs); this file covers the plumbing those properties ride on.
+"""
+import numpy as np
+import pytest
+
+from repro.comm import CODECS, UpdateCodec, get_codec
+from repro.core.distributed import COMM_TRANSPORTS, get_scheme
+from repro.optim.local_updates import (LocalUpdatesConfig, delta_wire_bytes,
+                                       suggest_H)
+
+
+# ---------------------------------------------------------------- parsing
+def test_scheme_parses_transport_and_codec():
+    assert get_scheme("persistent").transport == "persistent"
+    assert get_scheme("persistent").codec.name == "f32"
+    # bare "compressed" aliases the pre-codec int8 path
+    assert get_scheme("compressed").codec.name == "int8"
+    assert get_scheme("compressed:int8").codec.name == "int8"
+    assert get_scheme("compressed:int4").codec.name == "int4"
+    assert get_scheme("compressed:f32").codec.name == "f32"
+    for transport in COMM_TRANSPORTS:
+        assert get_scheme(transport).transport == transport
+
+
+def test_scheme_rejects_bad_codec_compositions():
+    with pytest.raises(ValueError, match="unknown comm scheme"):
+        get_scheme("persistant")
+    with pytest.raises(ValueError, match="unknown update codec"):
+        get_scheme("compressed:int2")
+    # exact transports move f32 by construction — no codec suffix
+    for scheme in ("persistent:int8", "reduce_scatter:int4",
+                   "spark_faithful:f32"):
+        with pytest.raises(ValueError, match="codec suffix"):
+            get_scheme(scheme)
+
+
+def test_get_codec_registry():
+    for name in ("f32", "int8", "int4"):
+        assert isinstance(get_codec(name), UpdateCodec)
+        assert get_codec(name) is CODECS[name]
+    with pytest.raises(ValueError, match="unknown update codec"):
+        get_codec("bf16")
+
+
+# ------------------------------------------------------------ wire bytes
+@pytest.mark.parametrize("L", [1, 2, 7, 96, 97, 256])
+def test_codec_wire_bytes_formulas(L):
+    assert get_codec("f32").wire_bytes(L) == 4 * L
+    assert get_codec("int8").wire_bytes(L) == L + 4
+    # packed int4: ceil(L/2) payload + the 4-byte f32 scale
+    assert get_codec("int4").wire_bytes(L) == -(-L // 2) + 4
+
+
+@pytest.mark.parametrize("L,K", [(96, 4), (97, 4), (256, 8)])
+def test_compressed_scheme_bytes_scale_with_codec(L, K):
+    """2 * K * wire_bytes for every codec under the compressed
+    transport — the number the drivers benchmark pins to the HLO."""
+    for codec in ("f32", "int8", "int4"):
+        scheme = get_scheme(f"compressed:{codec}")
+        assert (scheme.bytes_per_round(L, K)
+                == 2 * K * get_codec(codec).wire_bytes(L))
+    # and the compression ladder is strictly ordered
+    assert (get_scheme("compressed:int4").bytes_per_round(L, K)
+            < get_scheme("compressed:int8").bytes_per_round(L, K)
+            < get_scheme("compressed:f32").bytes_per_round(L, K))
+
+
+def test_timemodel_charges_codec_bytes():
+    """The trade-off layer sees the codec through bytes_per_round: a
+    cheaper codec means a cheaper wire term at identical overhead."""
+    from repro.bench.timing import synthetic_link
+    from repro.core import PROFILES
+    from repro.core.tradeoff import TimeModel
+
+    link = synthetic_link(1e9, 0.0)
+    times = {}
+    for codec in ("f32", "int8", "int4"):
+        nbytes = get_scheme(f"compressed:{codec}").bytes_per_round(4096, 8)
+        model = TimeModel(PROFILES["E_mpi"], nbytes, link)
+        times[codec] = model.comm_time_s()
+    assert times["int4"] < times["int8"] < times["f32"]
+    assert times["int4"] == pytest.approx(
+        2 * 8 * (2048 + 4) / 1e9)
+
+
+def test_sweep_cfg_accepts_codec_schemes():
+    """sweep_H's config path threads codec-suffixed schemes end to end
+    (cfg validation, trainer scheme, byte accounting)."""
+    from repro.core import CoCoAConfig, CoCoATrainer
+    from repro.data import make_glm_data
+
+    A, b, _ = make_glm_data(m=48, n=96, density=0.3, seed=1)
+    tr = CoCoATrainer(CoCoAConfig(K=4, H=8, comm_scheme="compressed:int4"),
+                      A, b)
+    assert tr.comm_bytes_per_round() == 2 * 4 * (24 + 4)
+    hist = tr.run(3, record_every=3)
+    assert len(hist.primal) == 1
+
+
+# ------------------------------------------------------- local updates
+def test_local_updates_config_validates_codec():
+    LocalUpdatesConfig(codec="int8")
+    with pytest.raises(ValueError, match="unknown update codec"):
+        LocalUpdatesConfig(codec="int2")
+    with pytest.raises(ValueError, match="average='delta'"):
+        LocalUpdatesConfig(codec="int8", average="params")
+    LocalUpdatesConfig(codec="f32", average="params")  # identity is fine
+
+
+def test_delta_wire_bytes_sums_leaves():
+    params = {"w": np.zeros((3, 5), np.float32),
+              "b": np.zeros((7,), np.float32)}
+    K = 4
+    assert (delta_wire_bytes(params, LocalUpdatesConfig(codec="f32"), K)
+            == 2 * K * 4 * 22)
+    assert (delta_wire_bytes(params, LocalUpdatesConfig(codec="int8"), K)
+            == 2 * K * ((15 + 4) + (7 + 4)))
+    assert (delta_wire_bytes(params, LocalUpdatesConfig(codec="int4"), K)
+            == 2 * K * ((8 + 4) + (4 + 4)))
+
+
+# ----------------------------------------------------------- suggest_H
+def test_suggest_H_respects_non_power_of_two_cap():
+    """Regression: the doubling loop used to overshoot a non-power-of-
+    two max_H (comm-dominated regimes returned 64 for max_H=48)."""
+    h = suggest_H(t_compute_per_step=1e-4, t_collective_per_sync=10.0,
+                  max_H=48)
+    assert h == 48
+    for max_H in (1, 3, 5, 48, 100):
+        assert suggest_H(1e-4, 10.0, max_H=max_H) <= max_H
+    # the clamp must not disturb the interior optimum
+    assert suggest_H(1.0, 0.01, max_H=48) == 1
+    assert suggest_H(0.1, 0.8, max_H=48) == suggest_H(0.1, 0.8, max_H=64)

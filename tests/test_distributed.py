@@ -1,9 +1,10 @@
 """Multi-device tests (subprocess with faked host devices): shard_map
 CoCoA driver, the sync/stale exchange-mode contract, expert-parallel
 MoE, local-update rounds, and a dry-run smoke on the production mesh —
-plus the in-process quantizer property test (hypothesis when installed,
-a deterministic seed battery otherwise; NOT a module-wide importorskip,
-so the rest of this file always runs).
+plus the in-process codec round-trip property test over ALL wire codecs
+(f32 / int8 / packed int4; hypothesis when installed, a deterministic
+seed battery otherwise; NOT a module-wide importorskip, so the rest of
+this file always runs).
 """
 import functools
 import os
@@ -36,11 +37,15 @@ def _run(py: str, ndev: int = 8, timeout: int = 560) -> str:
 
 
 # ---------------------------------------------------------------------------
-# quantizer property test (in-process; hypothesis optional)
+# codec round-trip property test, ALL codecs (in-process; hypothesis
+# optional)
 # ---------------------------------------------------------------------------
+CODEC_NAMES = ("f32", "int8", "int4")
+
+
 @functools.cache
-def _quant_paths():
-    """The execution paths of the quantize/dequantize round-trip, all
+def _codec_paths(codec_name: str):
+    """The execution paths of one codec's encode/decode round-trip, all
     JITTED (as the drivers run them; jit re-specializes per input shape
     on its own): the vmap stacked path, the per-shard shard_map path on
     a 1-device ``workers`` axis (the 4-device variant is covered by
@@ -52,57 +57,87 @@ def _quant_paths():
     import jax
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.distributed import (dequantize_update, get_scheme,
-                                        quantize_update)
+    from repro.comm import get_codec
+    from repro.core.distributed import get_scheme
     from repro.utils import compat
+
+    codec = get_codec(codec_name)
 
     @jax.jit
     def vmap_path(d):
-        q, s = jax.vmap(quantize_update)(d)
-        return dequantize_update(q, s[:, None])
+        parts = jax.vmap(codec.encode)(d)
+        return codec.decode_stacked(parts, d.shape[1])
 
     mesh = compat.make_mesh((1,), ("workers",))
     shard_path = jax.jit(compat.shard_map(
-        lambda d: dequantize_update(*quantize_update(d[0]))[None],
+        lambda d: codec.decode(codec.encode(d[0]), d.shape[-1])[None],
         mesh, in_specs=P("workers"), out_specs=P("workers")))
-    agg_path = jax.jit(get_scheme("compressed").all_reduce_stacked)
+    agg_path = jax.jit(
+        get_scheme(f"compressed:{codec_name}").all_reduce_stacked)
     sum_path = jax.jit(lambda rows: jax.numpy.sum(rows, axis=0))
-    return vmap_path, shard_path, agg_path, sum_path
+    scales_path = jax.jit(lambda d: jax.vmap(codec.encode)(d)[-1])
+    return vmap_path, shard_path, agg_path, sum_path, scales_path
 
 
-def _check_quantize_roundtrip(dv_np: np.ndarray):
-    """The quantizer contract on one (K, L) update stack: elementwise
-    round-trip error bounded by scale/2, and the vmap path bit-identical
-    to the per-shard shard_map path (both for the per-worker vectors and
-    for the aggregate the round actually applies)."""
-    import jax
+def _roundtrip_bound(codec_name: str, scales: np.ndarray) -> np.ndarray:
+    """Per-row elementwise error bound of ``decode(encode(x))``.
+
+    * ``f32``  — the identity: exact.
+    * ``int8`` — scale/2: absmax scaling puts every entry inside
+      [-127, 127]*scale, so clipping never bites and the only error is
+      round-to-nearest.
+    * ``int4`` — scale/2 likewise (scale = absmax/7.5, the 15-level
+      grid over [-absmax, absmax]): the bound equals absmax/15, which
+      is ~8.5x the int8 codec's scale — the price of packing two
+      elements per byte.
+
+    The f32 divide/multiply round-trip gets a 1-ulp-ish allowance.
+    """
+    if codec_name == "f32":
+        return np.zeros_like(scales)[:, None]
+    return 0.5 * scales[:, None] * (1 + 1e-5) + 1e-30
+
+
+def _check_codec_roundtrip(codec_name: str, dv_np: np.ndarray):
+    """The codec contract on one (K, L) update stack: elementwise
+    round-trip error bounded by the codec's grid (see
+    ``_roundtrip_bound``), zero rows decoding to exact zeros, and the
+    vmap path bit-identical to the per-shard shard_map path (both for
+    the per-worker vectors and for the aggregate the round applies)."""
     import jax.numpy as jnp
 
-    from repro.core.distributed import quantize_update
-
     dv = jnp.asarray(dv_np, jnp.float32)
-    vmap_path, shard_path, agg_path, sum_path = _quant_paths()
+    (vmap_path, shard_path, agg_path, sum_path,
+     scales_path) = _codec_paths(codec_name)
     deq = vmap_path(dv)
-    _, s = jax.vmap(quantize_update)(dv)
-    # |dequant - dv| <= scale/2 elementwise: absmax scaling puts every
-    # entry inside [-127, 127] * scale, so clipping never bites and the
-    # only error is round-to-nearest (the f32 divide/multiply round-trip
-    # gets a 1-ulp-ish allowance)
+    s = (np.asarray(scales_path(dv)) if codec_name != "f32"
+         else np.zeros(dv.shape[0], np.float32))
     err = np.abs(np.asarray(deq) - np.asarray(dv))
-    bound = 0.5 * np.asarray(s)[:, None] * (1 + 1e-5) + 1e-30
+    bound = _roundtrip_bound(codec_name, s)
     assert (err <= bound).all(), (
-        f"round-trip error {err.max()} exceeds scale/2 "
-        f"(worst scale {np.asarray(s).max()})")
+        f"{codec_name}: round-trip error {err.max()} exceeds the grid "
+        f"bound (worst scale {s.max()})")
+    # an all-zero worker row must decode to EXACT zeros — the explicit
+    # guarantee of every codec (guarded scale, symmetric grid with 0)
+    zero_rows = ~np.any(dv_np, axis=1)
+    assert (np.asarray(deq)[zero_rows] == 0).all(), (
+        f"{codec_name}: zero update decoded to nonzero values")
     # bit-identity with the shard_map path, per worker row
     shard_rows = [shard_path(row[None]) for row in dv]
     for k, row in enumerate(shard_rows):
         assert np.array_equal(np.asarray(row[0]), np.asarray(deq[k])), \
-            f"worker {k}: vmap and shard_map dequants differ bitwise"
+            f"{codec_name} worker {k}: vmap and shard_map dequants " \
+            f"differ bitwise"
     # ... and for the aggregate the compressed exchange applies
     agg_v = agg_path(dv)
     agg_s = sum_path(jnp.concatenate(shard_rows, axis=0))
     assert np.array_equal(np.asarray(agg_v), np.asarray(agg_s)), \
-        "aggregate drift between the vmap and shard_map paths"
+        f"{codec_name}: aggregate drift between vmap and shard_map paths"
+
+
+def _check_all_codecs(dv_np: np.ndarray):
+    for codec_name in CODEC_NAMES:
+        _check_codec_roundtrip(codec_name, dv_np)
 
 
 def _random_update_stack(seed: int) -> np.ndarray:
@@ -122,23 +157,134 @@ def _random_update_stack(seed: int) -> np.ndarray:
 if HAVE_HYPOTHESIS:
     @settings(max_examples=30, deadline=None)
     @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
-    def test_quantize_roundtrip_property(seed):
-        _check_quantize_roundtrip(_random_update_stack(seed))
+    def test_codec_roundtrip_property(seed):
+        _check_all_codecs(_random_update_stack(seed))
 else:
     @pytest.mark.parametrize("seed", range(30))
-    def test_quantize_roundtrip_property(seed):
-        _check_quantize_roundtrip(_random_update_stack(seed))
+    def test_codec_roundtrip_property(seed):
+        _check_all_codecs(_random_update_stack(seed))
 
 
-def test_quantize_roundtrip_edge_values():
+def test_codec_roundtrip_edge_values():
     """Exact edge cases the random sweep may miss: all-zero stacks, a
-    single huge entry, and values straddling the int8 clip boundary."""
-    _check_quantize_roundtrip(np.zeros((4, 64), np.float32))
+    single huge entry, values straddling the int8 clip boundary, and
+    single-element updates (odd length: the int4 packer's padded
+    nibble)."""
+    _check_all_codecs(np.zeros((4, 64), np.float32))
     spike = np.zeros((4, 64), np.float32)
     spike[1, 3] = 3e38
-    _check_quantize_roundtrip(spike)
+    _check_all_codecs(spike)
     ramp = np.tile(np.linspace(-1.0, 1.0, 64, dtype=np.float32), (4, 1))
-    _check_quantize_roundtrip(ramp * 127.49)
+    _check_all_codecs(ramp * 127.49)
+    _check_all_codecs(np.asarray([[2.5], [-1e-8], [0.0], [3e38]],
+                                 np.float32))
+    _check_all_codecs(np.ones((1, 1), np.float32))
+
+
+def test_int4_pack_layout_and_wire_bytes():
+    """The packed int4 wire format: ceil(L/2) uint8 payload under
+    split-half pairing (element i shares a byte with element
+    i + ceil(L/2)), plus the 4-byte scale — the formula the byte model
+    charges."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import get_codec
+
+    codec = get_codec("int4")
+    for L in (1, 2, 7, 64, 97):
+        dv = jnp.asarray(np.linspace(-1, 1, L), jnp.float32)
+        packed, scale = jax.jit(codec.encode_ref)(dv)
+        assert packed.shape == ((L + 1) // 2,) and packed.dtype == jnp.uint8
+        assert codec.wire_bytes(L) == (L + 1) // 2 + 4
+        half = (L + 1) // 2
+        q = np.round(np.asarray(dv) / float(scale)).clip(-7, 7).astype(int)
+        q = np.concatenate([q, np.zeros(2 * half - L, int)])
+        expect = (q[:half] + 8) | ((q[half:] + 8) << 4)
+        assert (np.asarray(packed) == expect).all(), L
+
+
+def test_quantize_pack_kernel_bit_identical_to_oracle():
+    """The fused Pallas quantize+pack kernel (interpret mode off-TPU)
+    must be BIT-identical to the jitted jnp oracle — payload and scale
+    — for both codecs, across lengths exercising lane padding and the
+    odd-length int4 tail."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import (quantize_pack_int4, quantize_pack_int4_ref,
+                               quantize_pack_int8, quantize_pack_int8_ref)
+
+    pairs = ((jax.jit(quantize_pack_int8_ref), quantize_pack_int8),
+             (jax.jit(quantize_pack_int4_ref), quantize_pack_int4))
+    for L in (1, 2, 7, 96, 128, 257):
+        for seed in range(3):
+            r = np.random.default_rng(1000 * L + seed)
+            dv = jnp.asarray(
+                r.standard_normal(L) * 10.0 ** r.uniform(-8, 8),
+                jnp.float32)
+            for ref_fn, ker_fn in pairs:
+                p_r, s_r = ref_fn(dv)
+                p_k, s_k = ker_fn(dv)
+                assert np.array_equal(np.asarray(p_r), np.asarray(p_k)), (
+                    L, seed, ker_fn.__name__)
+                assert float(s_r) == float(s_k), (L, seed)
+        z = jnp.zeros((L,), jnp.float32)
+        for ref_fn, ker_fn in pairs:
+            p_r, s_r = ref_fn(z)
+            p_k, s_k = ker_fn(z)
+            assert np.array_equal(np.asarray(p_r), np.asarray(p_k))
+            assert float(s_r) == float(s_k) == 1.0  # the zero guard
+
+
+def test_compressed_int8_bit_identical_to_legacy_quantizer():
+    """Regression pin on the codec refactor: ``compressed:int8`` (and
+    its bare ``compressed`` alias) must aggregate BIT-identically to
+    the pre-codec quantizer (``scale = absmax/127 + 1e-30`` inline in
+    core/distributed.py) for any nonzero input — the refactor moved
+    the int8 path, it must not have changed it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distributed import get_scheme
+
+    @jax.jit
+    def legacy_stacked(updates):
+        def q1(dv):
+            scale = jnp.max(jnp.abs(dv)) / 127.0 + 1e-30
+            q = jnp.clip(jnp.round(dv / scale), -127, 127).astype(jnp.int8)
+            return q, scale
+        q, scale = jax.vmap(q1)(updates)
+        return jnp.sum(q.astype(jnp.float32) * scale[:, None], axis=0)
+
+    aliased = jax.jit(get_scheme("compressed").all_reduce_stacked)
+    named = jax.jit(get_scheme("compressed:int8").all_reduce_stacked)
+    for seed in range(20):
+        dv = jnp.asarray(_random_update_stack(seed), jnp.float32)
+        want = np.asarray(legacy_stacked(dv))
+        assert np.array_equal(want, np.asarray(aliased(dv))), seed
+        assert np.array_equal(want, np.asarray(named(dv))), seed
+
+
+def test_compressed_alias_trajectory_bit_identical():
+    """End-to-end regression: a CoCoA run under the bare ``compressed``
+    scheme and under the explicit ``compressed:int8`` spelling must
+    produce bit-identical iterates (the alias is the same codec object,
+    not a second implementation)."""
+    from repro.core import CoCoAConfig, CoCoATrainer
+    from repro.data import make_glm_data
+
+    A, b, _ = make_glm_data(m=64, n=128, density=0.3, seed=3)
+    finals = {}
+    for scheme in ("compressed", "compressed:int8"):
+        tr = CoCoATrainer(CoCoAConfig(K=4, H=32, seed=0,
+                                      comm_scheme=scheme), A, b)
+        tr.run(6, record_every=6)
+        finals[scheme] = (tr.alpha_final, tr.w_final)
+    assert np.array_equal(finals["compressed"][0],
+                          finals["compressed:int8"][0])
+    assert np.array_equal(finals["compressed"][1],
+                          finals["compressed:int8"][1])
 
 
 def test_cocoa_sharded_matches_virtual():
@@ -416,6 +562,60 @@ w_lu = jax.jit(round_fn)(w0, X, Y)
 assert float(jnp.max(jnp.abs(w_lu - w_ref))) < 1e-6, (w_lu, w_ref)
 print("OK")
 """)
+
+
+def test_local_updates_codec_delta_exchange():
+    """The transformer local-SGD workload's compressed exchange: with a
+    quantizing codec the delta exchange all-gathers encoded payloads
+    and decodes+means locally. H=2 local SGD on a 4-shard toy problem:
+    the int8 result must track the exact f32 pmean to the codec's grid
+    error, int4 coarser but bounded, and an all-zero delta (lr=0) must
+    come back EXACTLY zero — the codec layer's zero guarantee, end to
+    end through shard_map."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim import LocalUpdatesConfig, local_updates_round
+from repro.utils.compat import make_mesh, shard_map
+mesh = make_mesh((4,), ("data",))
+def loss(w, b):
+    x, y = b
+    return jnp.mean((x @ w - y) ** 2)
+def make_step(lr):
+    def sgd_step(w, o, b):
+        return w - lr * jax.grad(loss)(w, b), o, {}
+    return sgd_step
+rng = np.random.default_rng(0)
+X = jnp.asarray(rng.standard_normal((4, 2, 6, 3)), jnp.float32)  # (shards, H=2, batch, feat)
+Y = jnp.asarray(rng.standard_normal((4, 2, 6)), jnp.float32)
+w0 = jnp.asarray(rng.standard_normal(3), jnp.float32)
+def run(codec, lr):
+    cfg = LocalUpdatesConfig(H=2, codec=codec)
+    def body(Xl, Yl, w):
+        w2, _, _ = local_updates_round(make_step(lr), w, {}, (Xl[0], Yl[0]),
+                                       cfg, "data")
+        return w2
+    f = shard_map(body, mesh, in_specs=(P("data"), P("data"), P(None)),
+                  out_specs=P(None))
+    return jax.jit(f)(X, Y, w0)
+w_f32 = run("f32", 0.05)
+d_f32 = np.abs(np.asarray(w_f32) - np.asarray(w0)).max()
+assert d_f32 > 0, "reference round did not move"
+for codec, mult in (("int8", 1.0), ("int4", 17.0)):
+    w_c = run(codec, 0.05)
+    err = np.abs(np.asarray(w_c) - np.asarray(w_f32)).max()
+    # the averaged delta's error is bounded by the mean of per-shard
+    # grid errors; compare against the f32 delta magnitude with the
+    # codec's grid-coarseness factor (int4 grid ~17x coarser)
+    assert err <= 0.02 * mult * max(d_f32, 1e-9), (codec, err, d_f32)
+# lr=0: every shard's delta is exactly zero -> the decoded mean must be
+# exactly w0 under EVERY codec (the zero-input guarantee through the
+# whole exchange)
+for codec in ("f32", "int8", "int4"):
+    w_z = run(codec, 0.0)
+    assert np.array_equal(np.asarray(w_z), np.asarray(w0)), codec
+print("OK")
+""", ndev=4)
 
 
 def test_dryrun_production_mesh_smoke():
