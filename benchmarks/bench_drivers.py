@@ -26,7 +26,17 @@ Derived must equal the model exactly — in BOTH modes: the stale
 exchange delays the apply but still runs the identical collective every
 round, so staleness may never change the bytes on the wire. The HLO is
 also checked for the codec's wire dtype (s8 / packed u8 all-gathers
-present exactly when the codec is int8 / int4). `run_sharded` needs a
+present exactly when the codec is int8 / int4).
+
+On top of the matrix, REGIME_CELLS exercise the full ExchangeConfig
+grammar: a straggler profile (asserted trajectory-identical to the base
+cell — straggling is charged by TimeModel's barrier, never by the
+drivers), bounded staleness `stale:k=2`, and elastic membership
+(`drop:w@d-r`), whose live-round `comm_bytes_per_round(t)` must be
+exactly K_live/K of the full-membership traffic while the compiled
+collective — and hence the HLO bytes — is unchanged.
+
+`run_sharded` needs a
 multi-device mesh — `python -m repro.bench.run --smoke` fakes one via
 ``--xla_force_host_platform_device_count``; when only one device exists
 (e.g. in-process tests) the sharded leg degrades to a K=1 mesh, which
@@ -41,7 +51,8 @@ import time
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
 from repro.bench.timing import time_callable
-from repro.core.distributed import EXCHANGE_MODES, get_scheme
+from repro.core.distributed import (EXCHANGE_MODES, CommScheme,
+                                    ExchangeConfig)
 from repro.core.glm import suboptimality
 
 # every transport x codec cell: the exact transports compose only with
@@ -52,6 +63,21 @@ SCHEMES = ("persistent", "spark_faithful", "compressed:f32",
            "compressed:int8", "compressed:int4", "reduce_scatter")
 MODES = EXCHANGE_MODES
 ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
+
+# Regime cells (full ExchangeConfig specs) on top of the transport x
+# codec x mode matrix: straggler jitter (must be time-only — the BSP
+# barrier makes straggling a wall-clock effect, so the trajectory is
+# asserted bit-identical to the base cell), bounded staleness k=2 (the
+# delayed apply two rounds deep), and elastic membership (worker 1 drops
+# at round 2, rejoins after round 4; live-round traffic shrinks with the
+# live-worker count while the full-membership HLO bytes are unchanged —
+# masking happens before the collective, never inside it).
+REGIME_CELLS = (
+    ("cocoa", "persistent/straggler:mix(p=0.25,slow=8)"),
+    ("cocoa", "persistent/stale:k=2"),
+    ("cocoa", "persistent/drop:1@2-4"),
+    ("minibatch_sgd", "compressed:int8/drop:1@2-4"),
+)
 
 # Fixed-seed rounds-to-eps bands per algorithm (smoke tier: m=96, n=256,
 # K=4, seed 42 data / seed 0 trainer). Measured centers ~15 / ~32 / ~93;
@@ -93,13 +119,13 @@ def _eps(algo: str, scheme: str, wl) -> float:
     # the sqrt-decay SGD schedule cannot hit 1e-3 in smoke budgets;
     # 10x looser still separates the schemes
     eps = 10 * wl.eps if algo == "minibatch_sgd" else wl.eps
-    codec = get_scheme(scheme).codec.name
+    codec = CommScheme.parse(scheme).codec.name
     return eps * CODEC_EPS_MULT.get(codec, {}).get(algo, 1)
 
 
 def _band(algo: str, scheme: str, mode: str) -> tuple[int, int]:
     lo, hi = SMOKE_BANDS[algo]
-    codec = get_scheme(scheme).codec.name
+    codec = CommScheme.parse(scheme).codec.name
     if codec == "int8":
         hi *= 2          # quantization error costs extra rounds
     elif codec == "int4":
@@ -115,15 +141,14 @@ def _make_trainer(algo: str, wl, tier: str, K: int, scheme: str, mode: str,
                             MinibatchSGD, SGDConfig)
 
     A, b, _ = common.problem(wl)
+    ex = common._exchange_of(scheme, mode)
     if algo == "minibatch_sgd":
         # the tier-calibrated MLlib-style base step lives on the workload
         return MinibatchSGD(
             SGDConfig(batch_frac=1.0, step_size=wl.sgd_step,
-                      lam=wl.lam, K=K, seed=seed, comm_scheme=scheme,
-                      exchange_mode=mode), A, b)
+                      lam=wl.lam, K=K, seed=seed, exchange=ex), A, b)
     cfg = CoCoAConfig(K=K, H=common.n_local(wl, K), lam=wl.lam,
-                      solver="scd_ref", comm_scheme=scheme,
-                      exchange_mode=mode, seed=seed)
+                      solver="scd_ref", exchange=ex, seed=seed)
     cls = MinibatchSCD if algo == "minibatch_scd" else CoCoATrainer
     return cls(cfg, A, b)
 
@@ -219,12 +244,13 @@ def run(ctx: BenchContext) -> dict:
     K_sh = min(wl.K, len(jax.devices()))
     mesh = make_mesh((K_sh,), ("workers",))
     rows, timings, counters, notes = [], {}, {}, []
+    base_traj = {}   # algo -> (virtual r2e, final subopt) at persistent/sync
     for algo in ALGORITHMS:
         for scheme in SCHEMES:
             # ':' would leak into counter keys and shell-unfriendly
             # row labels; cells use the flattened form
             scheme_key = scheme.replace(":", "_")
-            codec = get_scheme(scheme).codec.name
+            codec = CommScheme.parse(scheme).codec.name
             for mode in MODES:
                 eps = _eps(algo, scheme, wl)
                 lo, band_hi = _band(algo, scheme, mode)
@@ -232,6 +258,8 @@ def run(ctx: BenchContext) -> dict:
                 tr_v = _make_trainer(algo, wl, ctx.tier, wl.K, scheme, mode,
                                      ctx.seed)
                 r_v, t_v, s_v = _run_virtual(tr_v, wl, eps)
+                if scheme == "persistent" and mode == "sync":
+                    base_traj[algo] = (r_v, s_v)
                 tr_s = _make_trainer(algo, wl, ctx.tier, K_sh, scheme, mode,
                                      ctx.seed)
                 round_fn = tr_s.build_sharded_round(mesh)  # 1 compile/cell
@@ -290,6 +318,95 @@ def run(ctx: BenchContext) -> dict:
                              f"eps={eps}; {modelled} modelled bytes/round"
                              + (f" == {derived} from HLO"
                                 if derived is not None else ""))
+    # --- regime cells: straggler / bounded-staleness / elastic ---------
+    for algo, spec in REGIME_CELLS:
+        ex = ExchangeConfig.parse(spec)
+        cell_key = re.sub(r"[^a-z0-9]+", "_", spec.lower()).strip("_")
+        eps = _eps(algo, ex.scheme.name, wl)
+        lo, band_hi = _band(algo, ex.scheme.name, ex.mode.name)
+        codec = ex.scheme.codec.name
+        tr_v = _make_trainer(algo, wl, ctx.tier, wl.K, spec, "sync",
+                             ctx.seed)
+        r_v, t_v, s_v = _run_virtual(tr_v, wl, eps)
+        if ex.straggler.active and ex.membership.empty and not ex.mode.stale:
+            # straggling is charged by TimeModel's barrier, never by the
+            # drivers: the trajectory must be bit-identical to base
+            r_b, s_b = base_traj[algo]
+            assert r_v == r_b and s_v == s_b, (
+                f"{spec}: straggler profile changed the trajectory "
+                f"({r_v} rounds/subopt {s_v:.2e} vs base {r_b}/{s_b:.2e})"
+                " — stragglers must be time-only")
+        # membership events name absolute worker indices; a
+        # device-starved mesh (K_sh < wl.K) cannot host them
+        run_sh = ex.membership.empty or K_sh == wl.K
+        if run_sh:
+            tr_s = _make_trainer(algo, wl, ctx.tier, K_sh, spec, "sync",
+                                 ctx.seed)
+            round_fn = tr_s.build_sharded_round(mesh)
+            r_s, t_s, s_s = _run_sharded(tr_s, wl, eps, round_fn)
+            modelled = tr_s.comm_bytes_per_round()
+            derived, wire_dt = (_hlo_traffic(tr_s, round_fn)
+                                if K_sh >= 2 else (None, None))
+        else:
+            tr_s = tr_v
+            r_s = t_s = s_s = None
+            modelled, derived, wire_dt = tr_v.comm_bytes_per_round(), None, \
+                None
+        legs = [("virtual", r_v, t_v, s_v)]
+        if run_sh:
+            legs.append(("sharded", r_s, t_s, s_s))
+        for driver, r2e, t_round, sub in legs:
+            cell = f"{algo}_{driver}_{cell_key}"
+            rows.append({"algorithm": algo, "driver": driver,
+                         "scheme": spec, "codec": codec,
+                         "mode": ex.mode.spec,
+                         "rounds_to_eps": r2e,
+                         "t_round_s": round(t_round, 6),
+                         "final_subopt": f"{sub:.2e}",
+                         "comm_bytes_per_round": modelled,
+                         "hlo_bytes_per_round": derived})
+            timings[f"{cell}_round"] = t_round
+            counters[f"rounds_to_eps_{cell}"] = (
+                r2e if r2e is not None else -1)
+            if ctx.tier == "smoke" and (driver == "virtual"
+                                        or K_sh == wl.K):
+                assert r2e is not None, (
+                    f"{cell} did not reach eps={eps} in "
+                    f"{wl.max_rounds} rounds (final subopt {sub:.2e})")
+                assert lo <= r2e <= band_hi, (
+                    f"{cell} rounds_to_eps={r2e} outside the "
+                    f"calibrated band [{lo}, {band_hi}]")
+        suffix = "" if K_sh == wl.K or not run_sh else f"_K{K_sh}"
+        counters[f"comm_bytes_per_round_{cell_key}{suffix}"] = modelled
+        if derived is not None:
+            counters[f"hlo_bytes_per_round_{cell_key}{suffix}"] = derived
+            assert modelled == derived, (
+                f"{spec}: modelled comm_bytes_per_round {modelled} != "
+                f"{derived} derived from the HLO collectives (K={K_sh})"
+                " — membership masking must stay outside the collective")
+            expect_dt = CODEC_WIRE_DTYPE[codec]
+            expect = {expect_dt} if expect_dt else set()
+            assert wire_dt == expect, (
+                f"{spec}: quantized collective dtypes {wire_dt} do not "
+                f"match the codec (expected {expect})")
+        if not ex.membership.empty:
+            # live-round traffic scales with the live-worker count while
+            # the compiled collective (and its HLO bytes) is unchanged
+            w, d, _ = ex.membership.events[0]
+            K_model = tr_s.cfg.K
+            live = tr_s.comm_bytes_per_round(t=d)
+            k_live = ex.membership.live_count(d, K_model)
+            assert live * K_model == modelled * k_live, (
+                f"{spec}: live-round bytes {live} at t={d} should be "
+                f"{k_live}/{K_model} of the full-membership {modelled}")
+            counters[f"comm_bytes_per_round_{cell_key}_live{suffix}"] = live
+            notes.append(f"{spec}: round t={d} moves {live} bytes "
+                         f"({k_live}/{K_model} live) vs {modelled} full")
+        notes.append(f"{algo}/{spec}: virtual {r_v}, sharded "
+                     f"(K={K_sh}) {r_s} rounds to eps={eps}; "
+                     f"{modelled} modelled bytes/round"
+                     + (f" == {derived} from HLO"
+                        if derived is not None else ""))
     if K_sh < wl.K:
         notes.append(f"only {K_sh} device(s) — run via `python -m "
                      f"repro.bench.run --smoke` to fake {wl.K} CPU devices"
@@ -298,7 +415,8 @@ def run(ctx: BenchContext) -> dict:
                        "K_sharded": K_sh, "eps": wl.eps,
                        "algorithms": list(ALGORITHMS),
                        "schemes": list(SCHEMES),
-                       "modes": list(MODES)},
+                       "modes": list(MODES),
+                       "regime_cells": [list(c) for c in REGIME_CELLS]},
             "timings_s": timings, "counters": counters,
             "rows": rows, "notes": notes}
 

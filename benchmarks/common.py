@@ -13,12 +13,15 @@ share a sweep (h_sweep, convergence, scaling) pay for it once per run.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import CoCoAConfig, CoCoATrainer, MinibatchSGD, SGDConfig
+from repro.core import (CoCoAConfig, CoCoATrainer, CommScheme,
+                        ExchangeConfig, MinibatchSGD, SGDConfig,
+                        StragglerProfile)
 from repro.core.tradeoff import (HSweep, HSweepPoint, make_trainer,
                                  measure_solver_time)
 from repro.data import make_glm_data
@@ -133,30 +136,44 @@ def h_grid(wl: Workload, K_: int | None = None) -> list[int]:
     return [max(1, int(f * nl)) for f in wl.h_fracs]
 
 
+def _exchange_of(scheme: str, mode: str) -> ExchangeConfig:
+    """Fold the legacy (scheme, mode) pair of knobs into one
+    :class:`ExchangeConfig`; ``scheme`` may itself be a full exchange
+    spec (``"persistent/straggler:det(slow=4)"``), ``mode`` any mode
+    spelling (``"sync"`` / ``"stale"`` / ``"stale:k=2"``)."""
+    return ExchangeConfig.parse(scheme if mode == "sync"
+                                else f"{scheme}/{mode}")
+
+
 def trainer(wl: Workload, H: int, solver: str = "scd_kernel",
             K_: int | None = None, seed: int = 0,
             comm_scheme: str = "persistent") -> CoCoATrainer:
     A, b, _ = problem(wl)
     return CoCoATrainer(
         CoCoAConfig(K=K_ or wl.K, H=H, lam=wl.lam, eta=1.0, solver=solver,
-                    comm_scheme=comm_scheme, seed=seed),
+                    exchange=comm_scheme, seed=seed),
         A, b)
 
 
 def bench_trainer(wl: Workload, algorithm: str, H: int,
                   solver: str = "scd_kernel", K_: int | None = None,
                   seed: int = 0, scheme: str = "persistent",
-                  mode: str = "sync"):
-    """Any of the three driver-layer algorithms on the tier workload."""
+                  mode: str = "sync",
+                  exchange: ExchangeConfig | str | None = None):
+    """Any of the three driver-layer algorithms on the tier workload.
+
+    ``exchange`` (a full spec) overrides the legacy (scheme, mode) pair.
+    """
     A, b, _ = problem(wl)
     K_ = K_ or wl.K
+    ex = (ExchangeConfig.parse(exchange) if exchange is not None
+          else _exchange_of(scheme, mode))
     if algorithm == "minibatch_sgd":
         cfg = SGDConfig(batch_frac=1.0, step_size=wl.sgd_step, lam=wl.lam,
-                        K=K_, H=H, seed=seed, comm_scheme=scheme,
-                        exchange_mode=mode)
+                        K=K_, H=H, seed=seed, exchange=ex)
     else:
         cfg = CoCoAConfig(K=K_, H=H, lam=wl.lam, eta=1.0, solver=solver,
-                          comm_scheme=scheme, seed=seed, exchange_mode=mode)
+                          exchange=ex, seed=seed)
     return make_trainer(algorithm, cfg, A, b)
 
 
@@ -170,44 +187,66 @@ def run_sweep(wl: Workload, K_: int | None = None,
               solver: str = "scd_kernel", algorithm: str = "cocoa",
               scheme: str = "persistent", mode: str = "sync") -> HSweep:
     """Measured rounds-to-eps + solver wall time per H (paper Fig 6 raw)
-    for any algorithm x comm scheme x exchange mode on the driver layer,
-    cached per (tier workload, K, solver, algorithm, scheme, mode).
+    for any algorithm x exchange config on the driver layer, cached per
+    (tier workload, K, solver, algorithm, canonical exchange spec).
+    ``scheme`` may be a full exchange spec; ``mode`` is folded in.
 
     The K virtual workers execute SERIALLY on this host, so the measured
     per-round solver time is divided by K to model the real cluster where
     workers run concurrently (the paper's setting).
 
-    Exact-sum schemes (persistent / spark_faithful / reduce_scatter)
-    share one measured trajectory *within a mode* — the virtual driver
-    reduces all of them with the same f32 sum, so only the modelled
-    traffic differs; ``compressed`` really is re-run (int8 error changes
-    the trajectory), and so is each exchange mode (the delayed apply
-    changes the trajectory for every scheme).
+    Two sharing rules keep the grid affordable:
+
+    * Exact-sum schemes (persistent / spark_faithful / reduce_scatter /
+      compressed:f32) share one measured trajectory per (mode,
+      membership) — the virtual driver reduces all of them with the same
+      f32 sum, so only the modelled traffic differs; quantizing codecs
+      really are re-run (int8/int4 error changes the trajectory), and so
+      is each exchange mode (the delayed apply changes the trajectory
+      for every scheme).
+    * Straggler profiles never change the trajectory at all (the BSP
+      barrier makes straggling a wall-clock effect, not a numeric one),
+      so a straggler-tagged spec reuses the straggler-free sweep and
+      only re-tags ``HSweep.exchange`` for the time model.
     """
     K_ = K_ or wl.K
-    key = (wl, K_, solver, algorithm, scheme, mode)
+    ex = _exchange_of(scheme, mode)
+    key = (wl, K_, solver, algorithm, ex.spec)
     if key in _SWEEPS:
         return _SWEEPS[key]
-    if scheme in EXACT_SUM_SCHEMES and scheme != "persistent":
-        base = run_sweep(wl, K_, solver, algorithm, "persistent", mode)
+    if ex.straggler.active:
+        base_ex = dataclasses.replace(ex, straggler=StragglerProfile())
+        base = run_sweep(wl, K_, solver, algorithm, base_ex.spec)
         sweep = HSweep(
             eps=base.eps, n_local=base.n_local, t_ref_s=base.t_ref_s,
-            points=list(base.points), algorithm=algorithm, scheme=scheme,
-            mode=mode,
+            points=list(base.points), algorithm=algorithm,
+            scheme=ex.scheme.name, mode=ex.mode.spec,
+            comm_bytes_per_round=base.comm_bytes_per_round,
+            exchange=ex.spec, workers=K_)
+        _SWEEPS[key] = sweep
+        return sweep
+    if ex.scheme.name in EXACT_SUM_SCHEMES and ex.scheme.name != "persistent":
+        base_ex = dataclasses.replace(ex, scheme=CommScheme("persistent"))
+        base = run_sweep(wl, K_, solver, algorithm, base_ex.spec)
+        sweep = HSweep(
+            eps=base.eps, n_local=base.n_local, t_ref_s=base.t_ref_s,
+            points=list(base.points), algorithm=algorithm,
+            scheme=ex.scheme.name, mode=ex.mode.spec,
             comm_bytes_per_round=bench_trainer(
                 wl, algorithm, base.n_local, solver, K_,
-                scheme=scheme, mode=mode).comm_bytes_per_round())
+                exchange=ex).comm_bytes_per_round(),
+            exchange=ex.spec, workers=K_)
         _SWEEPS[key] = sweep
         return sweep
     nl = n_local(wl, K_)
     eps = sweep_eps(wl, algorithm)
     grid = (wl.sgd_h_grid if algorithm == "minibatch_sgd"
             else h_grid(wl, K_))
-    sweep = HSweep(eps=eps, n_local=nl, algorithm=algorithm, scheme=scheme,
-                   mode=mode)
+    sweep = HSweep(eps=eps, n_local=nl, algorithm=algorithm,
+                   scheme=ex.scheme.name, mode=ex.mode.spec,
+                   exchange=ex.spec, workers=K_)
     for H in grid:
-        tr = bench_trainer(wl, algorithm, H, solver, K_, scheme=scheme,
-                           mode=mode)
+        tr = bench_trainer(wl, algorithm, H, solver, K_, exchange=ex)
         hist = (tr.run_workers(wl.max_rounds, record_every=1, target_eps=eps)
                 if algorithm == "minibatch_sgd"
                 else tr.run(wl.max_rounds, record_every=1, target_eps=eps))
@@ -215,8 +254,7 @@ def run_sweep(wl: Workload, K_: int | None = None,
         sweep.points.append(HSweepPoint(H, hist.rounds_to(eps), t_s))
         sweep.comm_bytes_per_round = tr.comm_bytes_per_round()
     sweep.t_ref_s = measure_solver_time(
-        bench_trainer(wl, algorithm, nl, solver, K_, scheme=scheme,
-                      mode=mode), nl,
+        bench_trainer(wl, algorithm, nl, solver, K_, exchange=ex), nl,
         reps=wl.reps) / K_
     _SWEEPS[key] = sweep
     return sweep

@@ -3,8 +3,9 @@
 Trains elastic-net ridge regression with CoCoA (Pallas-kernel local
 solver), compares the communication schemes, shows the H trade-off
 under two framework-overhead profiles, walks the unified
-distributed-driver layer's 3-algorithm x 4-scheme matrix, and flips
-the staleness knob (`exchange_mode="stale"`).
+distributed-driver layer's 3-algorithm x 4-scheme matrix, flips the
+staleness knob (`exchange="stale"`), and runs the straggler / elastic
+membership regimes through the same one-string `ExchangeConfig` spec.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -58,11 +59,11 @@ for algo in ("cocoa", "minibatch_scd", "minibatch_sgd"):
         eps = 1e-1 if scheme.endswith("int4") else 1e-2
         if algo == "minibatch_sgd":
             tr = MinibatchSGD(SGDConfig(step_size=0.1, K=8, lam=1.0,
-                                        comm_scheme=scheme), A, b)
+                                        exchange=scheme), A, b)
             h = tr.run_workers(300, record_every=1, target_eps=eps)
         else:
             cls = MinibatchSCD if algo == "minibatch_scd" else CoCoATrainer
-            tr = cls(CoCoAConfig(K=8, H=128, comm_scheme=scheme), A, b)
+            tr = cls(CoCoAConfig(K=8, H=128, exchange=scheme), A, b)
             h = tr.run(300, record_every=1, target_eps=eps)
         print(f"{algo:14s} {scheme:15s} {eps:>5g} "
               f"{str(h.rounds_to(eps)):>7s} "
@@ -75,10 +76,42 @@ print("=> same math per algorithm under every scheme; `compressed` "
 #    round late — same wire bytes, a (problem-dependent) convergence
 #    tax, and an exchange that can hide behind the next round's compute
 #    (the TimeModel charges max(0, t_comm - t_compute) per stale round).
-for mode in ("sync", "stale"):
-    tr = CoCoATrainer(CoCoAConfig(K=8, H=128, exchange_mode=mode), A, b)
+#    `stale:k=2` bounds the staleness at two rounds instead of one.
+for mode in ("sync", "stale", "stale:k=2"):
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=128, exchange=mode), A, b)
     h = tr.run(300, record_every=1, target_eps=1e-2)
-    print(f"cocoa/{mode:6s}: rounds->1e-2 = {h.rounds_to(1e-2):3d}, "
+    print(f"cocoa/{mode:9s}: rounds->1e-2 = {h.rounds_to(1e-2):3d}, "
           f"bytes/round = {tr.comm_bytes_per_round()}")
 print("=> same wire bytes either way, but stale rounds never wait on "
       "the wire — the paper's scheduling-delay regime as a knob.")
+
+# 7. stragglers and elastic membership, in the same one-string spec:
+#    a straggler profile never changes the math (the BSP barrier makes
+#    straggling a wall-clock effect the TimeModel charges as
+#    E[max over K workers]); a `drop:w@d-r` event really removes worker
+#    w's updates for rounds d..r and shrinks the live-round traffic.
+from repro.core.tradeoff import TimeModel  # noqa: E402
+from repro.bench.timing import synthetic_link  # noqa: E402
+
+base = CoCoATrainer(CoCoAConfig(K=8, H=128), A, b)
+slow = CoCoATrainer(CoCoAConfig(
+    K=8, H=128, exchange="persistent/straggler:mix(p=0.25,slow=8)"), A, b)
+h_base = base.run(300, record_every=1, target_eps=1e-2)
+h_slow = slow.run(300, record_every=1, target_eps=1e-2)
+assert h_base.rounds_to(1e-2) == h_slow.rounds_to(1e-2)  # time-only!
+link = synthetic_link(1e9, 1e-4)
+for tr, tag in ((base, "no stragglers"), (slow, "mix(p=0.25,slow=8)")):
+    tm = TimeModel(PROFILES["E_mpi"], tr.comm_bytes_per_round(), link,
+                   exchange=tr.exchange, workers=8)
+    print(f"cocoa {tag:20s}: barrier x{tm.barrier_mult:5.2f}, "
+          f"round_time(50ms solver) = "
+          f"{tm.round_time(0.05, 0.05) * 1e3:6.1f} ms")
+
+el = CoCoATrainer(CoCoAConfig(K=8, H=128,
+                              exchange="persistent/drop:3@2-4"), A, b)
+h = el.run(300, record_every=1, target_eps=1e-2)
+print(f"cocoa elastic drop:3@2-4: rounds->1e-2 = {h.rounds_to(1e-2)}, "
+      f"bytes full = {el.comm_bytes_per_round()}, "
+      f"at t=2 (7/8 live) = {el.comm_bytes_per_round(t=2)}")
+print("=> one grammar for the whole exchange: "
+      "transport:codec / stale:k / straggler:kind(...) / drop:w@d-r")

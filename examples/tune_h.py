@@ -14,14 +14,21 @@ model hides ``min(t_comm, t_compute)`` per round, so the tuner sees both
 the convergence tax and the overlap payoff.
 
 ``--codec int8|int4`` runs the exchange through the compressed
-transport with that wire codec (``comm_scheme="compressed:<codec>"``):
+transport with that wire codec (``exchange="compressed:<codec>"``):
 rounds-to-eps is measured on the actual quantized trajectories and the
 time model charges the codec's smaller wire bytes, so the tuner sees
 both sides of the compression trade too.
 
+``--straggler`` tags the exchange with a straggler profile (e.g.
+``mix(p=0.5,slow=16)``). Straggling never changes the measured
+trajectory (the BSP barrier makes it time-only), but the time model
+charges E[max over K workers] x the solver time — watch the tuned H
+drop as the barrier makes framework overhead relatively cheaper.
+
   PYTHONPATH=src python examples/tune_h.py
   PYTHONPATH=src python examples/tune_h.py --mode stale --bandwidth 1e8
   PYTHONPATH=src python examples/tune_h.py --codec int4 --bandwidth 1e8
+  PYTHONPATH=src python examples/tune_h.py --straggler "mix(p=0.5,slow=16)"
 """
 import argparse
 import functools
@@ -42,9 +49,17 @@ ap.add_argument("--codec", choices=("f32", "int8", "int4"), default="f32",
                 help="wire codec for the update exchange: f32 keeps the "
                      "exact persistent psum; int8/int4 run the "
                      "compressed transport with that codec")
+ap.add_argument("--straggler", default=None, metavar="KIND(...)",
+                help="straggler profile segment, e.g. 'det(slow=4)' or "
+                     "'mix(p=0.5,slow=16)' — time-only, charged by the "
+                     "time model's barrier term")
 args = ap.parse_args()
 SCHEME = ("persistent" if args.codec == "f32"
           else f"compressed:{args.codec}")
+# one ExchangeConfig spec carries the whole exchange: transport:codec /
+# mode / straggler profile
+EXCHANGE = SCHEME + ("" if args.mode == "sync" else f"/{args.mode}") + (
+    "" if args.straggler is None else f"/straggler:{args.straggler}")
 
 A, b, _ = make_glm_data(m=256, n=768, density=0.2, seed=4)
 # the target tolerance follows the codec's quantization noise floor:
@@ -57,22 +72,22 @@ H_REF = 96
 # Measure the solver-cost slope once (seconds per local SCD step) at the
 # reference point; the model extrapolates linearly in H, which is exact
 # for this solver (H sequential coordinate steps).
-_tr = CoCoATrainer(CoCoAConfig(K=8, H=H_REF, seed=0, comm_scheme=SCHEME,
-                               exchange_mode=args.mode), A, b)
+_tr = CoCoATrainer(CoCoAConfig(K=8, H=H_REF, seed=0, exchange=EXCHANGE),
+                   A, b)
 T_PER_STEP = measure_solver_time(_tr, H_REF, reps=3) / H_REF
 T_REF = T_PER_STEP * H_REF
 COMM_BYTES = _tr.comm_bytes_per_round()
 LINK = synthetic_link(args.bandwidth, 1e-4)
 print(f"measured solver cost: {T_PER_STEP * 1e6:.2f} us/step "
-      f"(t_ref={T_REF * 1e3:.2f} ms at H={H_REF}); mode={args.mode}, "
-      f"scheme={SCHEME}, {COMM_BYTES} B/round over a "
+      f"(t_ref={T_REF * 1e3:.2f} ms at H={H_REF}); "
+      f"exchange={EXCHANGE}, {COMM_BYTES} B/round over a "
       f"{args.bandwidth / 1e9:.2f} GB/s link")
 
 
 @functools.lru_cache(maxsize=64)
 def rounds_to_eps(H: int):
-    tr = CoCoATrainer(CoCoAConfig(K=8, H=H, seed=0, comm_scheme=SCHEME,
-                                  exchange_mode=args.mode), A, b)
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=H, seed=0, exchange=EXCHANGE),
+                      A, b)
     return tr.run(800, record_every=1, target_eps=EPS).rounds_to(EPS)
 
 
@@ -81,7 +96,8 @@ def round_time_model(model, H):
 
 
 for name in ("E_mpi", "D_pyspark_c"):
-    model = TimeModel(PROFILES[name], COMM_BYTES, LINK, mode=args.mode)
+    model = TimeModel(PROFILES[name], COMM_BYTES, LINK, exchange=EXCHANGE,
+                      workers=8)
     h_star = autotune_H(rounds_to_eps,
                         functools.partial(round_time_model, model), 4, 4096)
     grid = [8, 32, 96, 384, 1536, 4096]

@@ -146,10 +146,10 @@ def calibrate_link(scheme_name: str = "persistent", mesh=None,
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.distributed import get_scheme
+    from repro.core.distributed import CommScheme
     from repro.utils import compat
 
-    scheme = get_scheme(scheme_name)
+    scheme = CommScheme.parse(scheme_name)
     if mesh is None:
         mesh = compat.make_mesh((len(jax.devices()),), ("workers",))
     axis = mesh.axis_names[0]

@@ -6,7 +6,10 @@ from repro.core.glm import GLMProblem, primal_objective, ridge_exact, suboptimal
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer  # noqa: F401
 from repro.core.baselines import MinibatchSCD, MinibatchSGD, SGDConfig  # noqa: F401
 from repro.core.distributed import (COMM_SCHEMES, COMM_TRANSPORTS,  # noqa: F401
-                                    EXCHANGE_MODES, CommScheme, ExchangeMode,
-                                    get_mode, get_scheme)
+                                    EXCHANGE_MODES, STRAGGLER_KINDS,
+                                    CommScheme, ExchangeConfig, ExchangeMode,
+                                    MembershipSchedule, StragglerProfile,
+                                    get_mode, get_scheme, resolve_exchange)
 from repro.comm import CODECS, UpdateCodec, get_codec  # noqa: F401
 from repro.core.overheads import OverheadProfile, PROFILES  # noqa: F401
+from repro.utils.deprecation import ReproDeprecationWarning  # noqa: F401

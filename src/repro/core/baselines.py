@@ -55,12 +55,23 @@ class SGDConfig:
     K: int = 8
     H: int = 1                       # local SGD steps per round (H=1: MLlib)
     seed: int = 0
-    comm_scheme: str = "persistent"  # one of distributed.COMM_SCHEMES
-    exchange_mode: str = "sync"      # one of distributed.EXCHANGE_MODES
+    # the unified exchange surface (see distributed.ExchangeConfig for
+    # the spec grammar); the string knobs below are deprecated aliases
+    exchange: "dist.ExchangeConfig | str | None" = None
+    comm_scheme: str | None = None   # DEPRECATED alias -> exchange
+    exchange_mode: str | None = None  # DEPRECATED alias -> exchange
 
     def __post_init__(self):
-        dist.get_scheme(self.comm_scheme)  # fail loudly on typos
-        dist.get_mode(self.exchange_mode)
+        # fold everything into ONE validated ExchangeConfig (fail loudly
+        # on typos) and store the canonical values back so
+        # dataclasses.replace(cfg, ...) round-trips silently
+        ex = dist.resolve_exchange(self.exchange,
+                                   comm_scheme=self.comm_scheme,
+                                   exchange_mode=self.exchange_mode,
+                                   owner=type(self).__name__)
+        object.__setattr__(self, "exchange", ex)
+        object.__setattr__(self, "comm_scheme", ex.scheme.name)
+        object.__setattr__(self, "exchange_mode", ex.mode.spec)
         if self.H < 1:
             raise ValueError(f"H must be >= 1, got {self.H}")
 
@@ -78,6 +89,15 @@ class _SGDRound:
     the model delta, averaged by ``apply_update``. ``H=1`` keeps the
     exact MLlib-style single aggregated step (bit-identical RNG and
     float order), so the default path is unchanged."""
+
+    # SGD's aggregate is a MEAN over workers (the /K in apply_update for
+    # local SGD, the full-gradient estimate for H=1), so under elastic
+    # membership the drivers rescale the summed update by K / K_live —
+    # the average over the workers that actually contributed. (CoCoA's
+    # aggregate is an unscaled SUM of residual deltas; rescaling it
+    # would break the w = A@alpha - b invariant, so _CoCoARound leaves
+    # this flag unset.)
+    live_reweight = True
 
     def __init__(self, cfg: SGDConfig, problem: GLMProblem,
                  m_local: int, batch_local: int):
@@ -148,8 +168,9 @@ class MinibatchSGD:
         self.b = jnp.asarray(self.b_np)
         self.m, self.n = A.shape
         self.problem = GLMProblem(lam=cfg.lam, eta=cfg.eta)
-        self.scheme = dist.get_scheme(cfg.comm_scheme)
-        self.mode = dist.get_mode(cfg.exchange_mode)
+        self.exchange = cfg.exchange
+        self.scheme = self.exchange.scheme
+        self.mode = self.exchange.mode
         self.batch = max(1, int(cfg.batch_frac * self.m))
         self._step = self._build_step()
         self.m_local = -(-self.m // cfg.K)
@@ -172,8 +193,8 @@ class MinibatchSGD:
             data = (jnp.asarray(A_pad.reshape(cfg.K, m_local, self.n)),
                     jnp.asarray(b_pad.reshape(cfg.K, m_local)))
             algo = _SGDRound(cfg, self.problem, m_local, self.batch_local)
-            round_fn = dist.build_virtual_round(algo, self.scheme, data,
-                                                K=cfg.K, mode=self.mode)
+            round_fn = dist.build_virtual_round(algo, self.exchange, data,
+                                                K=cfg.K)
             self._dist_state = (data, algo, round_fn)
         return self._dist_state
 
@@ -207,7 +228,7 @@ class MinibatchSGD:
         Stale mode widens the shared slot to (alpha, pending gradient)."""
         local = jnp.zeros((self.cfg.K, 0), jnp.float32)
         alpha = jnp.zeros(self.n, jnp.float32)
-        return local, dist.init_exchange_state(self.mode, alpha)
+        return local, dist.init_exchange_state(self.exchange, alpha)
 
     def with_H(self, H: int) -> "MinibatchSGD":
         """Fresh trainer with the local-update count moved (the H-sweep
@@ -215,12 +236,17 @@ class MinibatchSGD:
         return type(self)(dataclasses.replace(self.cfg, H=int(H)),
                           self.A_np, self.b_np)
 
-    def comm_bytes_per_round(self) -> int:
+    def comm_bytes_per_round(self, t: int | None = None) -> int:
         """Modelled bytes through the master per round: the n-vector
         gradient all-reduce + parameter broadcast across K workers,
         sized to the dtypes the collectives actually move (int8 gradient
-        + f32 scale under ``compressed``, f32 otherwise)."""
-        return self.scheme.bytes_per_round(self.n, self.cfg.K)
+        + f32 scale under ``compressed``, f32 otherwise). ``t`` asks for
+        a specific 1-based round under the elastic membership schedule
+        (dropped workers ship nothing; ``None`` = all K live)."""
+        K_live = (None if t is None
+                  else self.exchange.membership.live_count(t, self.cfg.K))
+        return self.scheme.bytes_per_round(self.n, self.cfg.K,
+                                           K_live=K_live)
 
     # ------------------------------------------------------------------
     # legacy single-device loop (global row sampling)
@@ -317,8 +343,8 @@ class MinibatchSGD:
         equal the mesh axis size. Returns jitted
         ``round_fn(local, alpha, key, t)``."""
         assert mesh.devices.size == self.cfg.K, (mesh.devices.size, self.cfg.K)
-        return dist.build_sharded_round(self._algo, self.scheme, self._data,
-                                        mesh, mode=self.mode)
+        return dist.build_sharded_round(self._algo, self.exchange,
+                                        self._data, mesh)
 
     def run_sharded(self, rounds: int, mesh: Mesh | None = None,
                     record_every: int = 10,

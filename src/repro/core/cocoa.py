@@ -64,16 +64,31 @@ class CoCoAConfig:
     eta: float = 1.0                 # 1.0 = ridge
     sigma: float | None = None       # subproblem safety; default K ("adding")
     solver: str = "scd_ref"          # scd_ref | scd_kernel | scd_fixed
-    comm_scheme: str = "persistent"  # one of distributed.COMM_SCHEMES
-    exchange_mode: str = "sync"      # one of distributed.EXCHANGE_MODES
+    # the unified exchange surface: an ExchangeConfig or a spec string
+    # like "compressed:int4/stale:k=2/drop:1@5" (see
+    # distributed.ExchangeConfig for the grammar); None means the
+    # default persistent/sync exchange unless the deprecated knobs below
+    # say otherwise
+    exchange: "dist.ExchangeConfig | str | None" = None
+    comm_scheme: str | None = None   # DEPRECATED alias -> exchange
+    exchange_mode: str | None = None  # DEPRECATED alias -> exchange
     partitioner: str = "balanced"    # balanced | block
     seed: int = 0
 
     def __post_init__(self):
-        # a typo'd scheme or mode must fail loudly, not silently fall
-        # through to persistent/synchronous behavior
-        dist.get_scheme(self.comm_scheme)
-        dist.get_mode(self.exchange_mode)
+        # fold the deprecated comm_scheme/exchange_mode strings and the
+        # unified spec into ONE validated ExchangeConfig (a typo'd
+        # scheme or mode must fail loudly, not silently fall through to
+        # persistent/synchronous behavior), then store the canonical
+        # values back so dataclasses.replace(cfg, ...) round-trips
+        # silently and reads of the legacy fields stay truthful
+        ex = dist.resolve_exchange(self.exchange,
+                                   comm_scheme=self.comm_scheme,
+                                   exchange_mode=self.exchange_mode,
+                                   owner=type(self).__name__)
+        object.__setattr__(self, "exchange", ex)
+        object.__setattr__(self, "comm_scheme", ex.scheme.name)
+        object.__setattr__(self, "exchange_mode", ex.mode.spec)
         if self.partitioner not in ("balanced", "block"):
             raise ValueError(f"unknown partitioner {self.partitioner!r}; "
                              f"known: ('balanced', 'block')")
@@ -158,8 +173,9 @@ class CoCoATrainer:
     def __init__(self, cfg: CoCoAConfig, A: np.ndarray, b: np.ndarray):
         self.cfg = cfg
         self.problem = GLMProblem(lam=cfg.lam, eta=cfg.eta)
-        self.scheme = dist.get_scheme(cfg.comm_scheme)
-        self.mode = dist.get_mode(cfg.exchange_mode)
+        self.exchange = cfg.exchange
+        self.scheme = self.exchange.scheme
+        self.mode = self.exchange.mode
         self.A_np, self.b_np = np.asarray(A, np.float32), np.asarray(b, np.float32)
         m, n = A.shape
         self.m, self.n = m, n
@@ -177,9 +193,8 @@ class CoCoATrainer:
         self._algo = _CoCoARound(cfg, self.problem, self._solver)
         self._data = (self.A_st, self.col_sq, self.mask)
         self._round_fn = dist.build_virtual_round(
-            self._algo, self.scheme, self._data, K=cfg.K,
-            use_map=(cfg.solver == "scd_kernel"),  # pallas interpret: no vmap
-            mode=self.mode)
+            self._algo, self.exchange, self._data, K=cfg.K,
+            use_map=(cfg.solver == "scd_kernel"))  # pallas interpret: no vmap
         self._p_star_cache: float | None = None
 
     @property
@@ -195,8 +210,8 @@ class CoCoATrainer:
     def init_state(self):
         alpha = jnp.zeros((self.cfg.K, self.part.n_padded), jnp.float32)
         w = -self.b  # w = A @ 0 - b
-        # stale mode widens the shared slot to (w, pending Delta v)
-        return alpha, dist.init_exchange_state(self.mode, w)
+        # stale mode widens the shared slot to (w, pending Delta v queue)
+        return alpha, dist.init_exchange_state(self.exchange, w)
 
     def with_H(self, H: int) -> "CoCoATrainer":
         """A fresh trainer on the same problem with the H knob moved —
@@ -206,14 +221,21 @@ class CoCoATrainer:
         return type(self)(dataclasses.replace(self.cfg, H=int(H)),
                           self.A_np, self.b_np)
 
-    def comm_bytes_per_round(self) -> int:
+    def comm_bytes_per_round(self, t: int | None = None) -> int:
         """Modelled bytes through the master per round under the
         configured scheme — sized to the tensors the sharded collectives
         actually move (int8 Delta v + f32 scale for ``compressed``, f32
-        otherwise; the alpha round-trip counts the padded blocks)."""
+        otherwise; the alpha round-trip counts the padded blocks).
+        ``t`` asks for a specific 1-based round under the elastic
+        membership schedule: dropped workers ship nothing, so traffic
+        scales with the live-worker count (``None`` = all K live, the
+        schedule-free steady state)."""
+        K_live = (None if t is None
+                  else self.exchange.membership.live_count(t, self.cfg.K))
         return self.scheme.bytes_per_round(
             self.m, self.cfg.K,
-            local_state_len=self.cfg.K * self.part.n_padded)
+            local_state_len=self.cfg.K * self.part.n_padded,
+            K_live=K_live)
 
     # ------------------------------------------------------------------
     # the one record loop both drivers share
@@ -261,8 +283,8 @@ class CoCoATrainer:
         equal the mesh axis size. Returns jitted
         ``round_fn(alpha_st, w, key, t)``."""
         assert mesh.devices.size == self.cfg.K, (mesh.devices.size, self.cfg.K)
-        return dist.build_sharded_round(self._algo, self.scheme, self._data,
-                                        mesh, mode=self.mode)
+        return dist.build_sharded_round(self._algo, self.exchange,
+                                        self._data, mesh)
 
     def run_sharded(self, rounds: int, mesh: Mesh | None = None,
                     record_every: int = 1,

@@ -105,10 +105,10 @@ def communicated_bytes_per_round(m: int, n: int, K: int,
     if scheme is not None:
         # local import keeps this module import-light (no jax) for the
         # pure model-calibration path
-        from repro.core.distributed import get_scheme
+        from repro.core.distributed import CommScheme
         n_moved = -(n // -K) * K  # K padded blocks of ceil(n/K)
-        return get_scheme(scheme).bytes_per_round(m, K,
-                                                  local_state_len=n_moved)
+        return CommScheme.parse(scheme).bytes_per_round(
+            m, K, local_state_len=n_moved)
     v_traffic = 2 * K * m * itemsize
     a_traffic = 0 if persistent_alpha else 2 * n * itemsize
     return v_traffic + a_traffic

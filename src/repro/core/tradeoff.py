@@ -11,10 +11,12 @@ This module provides the sweep + autotuner used by the benchmarks and by
 ``optim/local_updates.py``'s roofline-driven variant for transformer
 training. Sweeps ride the unified distributed-driver layer
 (``repro.core.distributed``) for **all three algorithms** (CoCoA,
-mini-batch SCD, mini-batch SGD-as-local-SGD) under every comm scheme
-AND every exchange mode: ``base_cfg.comm_scheme`` and
-``base_cfg.exchange_mode`` thread through every grid point, so the
-sweep matrix is 3 algorithms x 4 schemes x 2 modes.
+mini-batch SCD, mini-batch SGD-as-local-SGD) under every exchange
+regime: ``base_cfg.exchange`` (the unified
+:class:`~repro.core.distributed.ExchangeConfig` — comm scheme,
+staleness bound, straggler profile, membership schedule) threads
+through every grid point, so the sweep matrix spans 3 algorithms x 4
+schemes x the staleness/straggler/membership axes.
 
 Per-round traffic under a scheme (``CommScheme.bytes_per_round``,
 HLO-verified by the ``drivers`` benchmark) is converted to seconds by
@@ -40,8 +42,9 @@ from repro.bench.timing import (LinkCalibration, calibrate_link,  # noqa: F401
                                 measure_solver_time, synthetic_link)
 from repro.core.baselines import MinibatchSCD, MinibatchSGD, SGDConfig
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer
-from repro.core.distributed import get_mode
+from repro.core.distributed import ExchangeConfig, ExchangeMode
 from repro.core.overheads import OverheadProfile
+from repro.utils.deprecation import warn_deprecated
 
 SWEEP_ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
 
@@ -73,9 +76,21 @@ class HSweep:
     t_ref_s: float = float("nan")  # measured t_solver at H = n_local
     points: list = field(default_factory=list)
     algorithm: str = "cocoa"
-    scheme: str = "persistent"
-    mode: str = "sync"             # exchange mode the sweep was run under
+    scheme: str = "persistent"     # display: the exchange's scheme name
+    mode: str = "sync"             # display: the exchange's mode spec
     comm_bytes_per_round: int = 0  # modelled wire traffic (H-independent)
+    exchange: str = "persistent"   # full canonical ExchangeConfig spec
+    workers: int = 0               # K the sweep ran with (barrier model)
+
+    def __post_init__(self):
+        # legacy construction sites set only the display (scheme, mode)
+        # pair; fold it into the canonical spec so for_sweep() — which
+        # reads ONLY `exchange` — never silently drops a stale mode
+        if self.exchange == "persistent" and (self.scheme != "persistent"
+                                              or self.mode != "sync"):
+            self.exchange = ExchangeConfig.parse(
+                self.scheme if self.mode == "sync"
+                else f"{self.scheme}/{self.mode}").spec
 
 
 # measure_solver_time lives in repro.bench.timing (the harness's shared
@@ -84,59 +99,108 @@ class HSweep:
 
 @dataclass(frozen=True)
 class TimeModel:
-    """Scheme- and mode-aware wall-clock model of one round:
+    """Exchange-aware wall-clock model of one round:
 
-        t_round(H) = profile.round_time(t_solver, t_ref)
+        t_round(H) = profile.round_time(barrier_mult * t_solver, t_ref)
                      + comm_bytes_per_round / bandwidth + latency   # sync
-                     + max(0, t_wire - t_compute)                   # stale
+                     + max(0, t_wire - k * t_compute)               # stale
 
     The first term is the paper's calibrated framework overhead
-    (§5.2/Fig 3); the second charges the scheme's modelled wire traffic
+    (§5.2/Fig 3), with the compute term stretched by the exchange's
+    straggler profile: a bulk-synchronous round waits for its slowest
+    worker (the paper's §4 barrier cost), so compute is charged as
+    E[max over the ``workers`` multipliers] x ``t_solver`` instead of
+    the scalar. The second charges the scheme's modelled wire traffic
     against a :class:`~repro.bench.timing.LinkCalibration` (measured by
-    ``calibrate_link`` or synthetic for what-if studies). Under
-    ``mode="stale"`` (the one-round-delayed apply) nothing waits on the
-    exchange — it overlaps the next round's compute, so the round only
-    pays the overhang: stale rounds hide ``min(t_wire, t_compute)``.
-    With ``link=None`` the model degrades to the bare profile, so every
-    pre-existing call site keeps its behavior.
+    ``calibrate_link`` or synthetic for what-if studies). Under a stale
+    mode nothing waits on the exchange — a ``k``-deep pending queue
+    lets it hide behind up to ``k`` rounds of (barrier-stretched)
+    compute, so the round only pays the overhang. With ``link=None``
+    the model degrades to the bare profile, so every pre-existing call
+    site keeps its behavior.
+
+    ``exchange`` is the unified spec (:class:`ExchangeConfig` or spec
+    string); the old ``mode=`` string knob is a deprecated alias. A
+    straggler-bearing exchange requires ``workers`` (the K the max is
+    taken over).
     """
     profile: OverheadProfile
     comm_bytes_per_round: int = 0
     link: LinkCalibration | None = None
-    mode: str = "sync"
+    exchange: "ExchangeConfig | str | None" = None
+    workers: int = 0
+    mode: str | None = None        # DEPRECATED alias -> exchange
 
     def __post_init__(self):
-        get_mode(self.mode)  # the one canonical validator; raises on typos
+        if self.mode is not None:
+            ex = self.exchange
+            if ex is not None and ExchangeMode.parse(self.mode) != \
+                    ExchangeConfig.parse(ex).mode:
+                raise ValueError(
+                    f"TimeModel: mode={self.mode!r} conflicts with "
+                    f"exchange={ExchangeConfig.parse(ex).spec!r} — drop "
+                    f"the deprecated knob")
+            if ex is None:
+                warn_deprecated(
+                    "TimeModel(mode=...) is deprecated; pass "
+                    "exchange='stale:k=2' (or an ExchangeConfig)")
+                ex = ExchangeConfig(mode=ExchangeMode.parse(self.mode))
+            object.__setattr__(self, "exchange", ex)
+            object.__setattr__(self, "mode", None)
+        ex = (ExchangeConfig() if self.exchange is None
+              else ExchangeConfig.parse(self.exchange))
+        object.__setattr__(self, "exchange", ex)
+        if ex.straggler.active and self.workers < 1:
+            raise ValueError(
+                "TimeModel with a straggler profile needs workers=K — "
+                "the barrier charges E[max over K workers]")
 
     @property
     def name(self) -> str:
         return self.profile.name
 
+    @property
+    def barrier_mult(self) -> float:
+        """The factor the bulk-synchronous barrier stretches compute
+        by: E[max over workers] of the straggler multiplier (1.0 with
+        no stragglers)."""
+        s = self.exchange.straggler
+        return s.expected_barrier_mult(self.workers) if s.active else 1.0
+
     def comm_time_s(self, t_compute_s: float = 0.0) -> float:
         """Wall seconds the round pays for the wire. ``t_compute_s``
-        only matters under ``stale``: the exchange hides behind that
-        much of the next round's compute."""
+        only matters under a stale mode: the exchange hides behind up
+        to ``k`` rounds of that much compute (the pending queue gives
+        the collective ``k`` rounds to finish)."""
         if self.link is None or self.comm_bytes_per_round <= 0:
             return 0.0
-        overlap = t_compute_s if self.mode == "stale" else 0.0
+        m = self.exchange.mode
+        overlap = m.k * t_compute_s if m.stale else 0.0
         return self.link.seconds_for(self.comm_bytes_per_round, overlap)
 
     def round_time(self, t_solver_s: float, t_ref_s: float,
                    t_master_s: float = 0.0) -> float:
-        return (self.profile.round_time(t_solver_s, t_ref_s, t_master_s)
-                + self.comm_time_s(self.profile.compute_mult * t_solver_s))
+        t_eff = self.barrier_mult * t_solver_s
+        return (self.profile.round_time(t_eff, t_ref_s, t_master_s)
+                + self.comm_time_s(self.profile.compute_mult * t_eff))
 
     def compute_fraction(self, t_solver_s: float, t_ref_s: float) -> float:
+        """Fraction of the round doing USEFUL compute: straggler
+        barrier slack counts as overhead, not compute."""
         c = self.profile.compute_mult * t_solver_s
-        other = self.profile.overhead_units * t_ref_s + self.comm_time_s(c)
+        c_barrier = self.barrier_mult * c
+        other = ((c_barrier - c) + self.profile.overhead_units * t_ref_s
+                 + self.comm_time_s(c_barrier))
         return c / max(c + other, 1e-30)
 
     def for_sweep(self, sweep: "HSweep") -> "TimeModel":
         """The same model charged with a sweep's modelled traffic and
-        run under the sweep's exchange mode."""
+        run under the sweep's full exchange spec (mode, stragglers,
+        membership) and worker count."""
         return dataclasses.replace(
             self, comm_bytes_per_round=sweep.comm_bytes_per_round,
-            mode=sweep.mode)
+            exchange=sweep.exchange,
+            workers=sweep.workers or self.workers)
 
 
 def make_trainer(algorithm: str, cfg, A, b):
@@ -160,13 +224,14 @@ def sweep_H(A, b, base_cfg, H_grid, eps: float = 1e-3,
             max_rounds: int = 2000, measure: bool = True,
             algorithm: str = "cocoa") -> HSweep:
     """Measured rounds-to-eps + solver wall time per H for ANY algorithm
-    on the driver layer, under ``base_cfg.comm_scheme``. Configs are
+    on the driver layer, under ``base_cfg.exchange``. Configs are
     perturbed with ``dataclasses.replace`` (never a ``__dict__`` splat,
     which silently breaks once a dataclass gains derived fields)."""
     n_local = int(np.ceil(A.shape[1] / base_cfg.K))
+    ex = base_cfg.exchange
     sweep = HSweep(eps=eps, n_local=n_local, algorithm=algorithm,
-                   scheme=base_cfg.comm_scheme,
-                   mode=base_cfg.exchange_mode)
+                   scheme=ex.scheme.name, mode=ex.mode.spec,
+                   exchange=ex.spec, workers=base_cfg.K)
     for H in H_grid:
         cfg = dataclasses.replace(base_cfg, H=int(H))
         trainer = make_trainer(algorithm, cfg, A, b)

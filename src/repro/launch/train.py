@@ -7,10 +7,14 @@
 On this CPU container use --reduced; on a real TPU slice the full config
 shards according to launch/sharding.py. --local-H enables the paper's
 communication-avoiding local-update rounds (H optimizer steps per
-parameter sync) with the roofline-driven default when set to 0;
---codec picks the wire codec for the delta exchange (f32 exact pmean,
-int8/int4 the compressed exchange — active when the round runs over a
-data-parallel mesh axis).
+parameter sync) with the roofline-driven default when set to 0.
+
+--exchange takes a full driver-layer exchange spec (e.g.
+``compressed:int4`` or ``compressed:int8/straggler:det(slow=4)``) and
+uses its wire codec for the delta exchange; --codec remains as the
+deprecated single-knob spelling (f32 exact pmean, int8/int4 the
+compressed exchange — active when the round runs over a data-parallel
+mesh axis).
 """
 from __future__ import annotations
 
@@ -40,12 +44,35 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--local-H", type=int, default=None,
                     help="local steps per sync (paper's knob); 0=auto")
+    ap.add_argument("--exchange", default=None, metavar="SPEC",
+                    help="driver-layer exchange spec (e.g. "
+                         "'compressed:int8'); its wire codec drives the "
+                         "delta exchange")
     ap.add_argument("--codec", choices=("f32", "int8", "int4"),
-                    default="f32",
-                    help="wire codec for the local-update delta exchange")
+                    default=None,
+                    help="DEPRECATED: wire codec alone — use "
+                         "--exchange compressed:<codec>")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+
+    # fold the deprecated --codec spelling into the --exchange spec
+    from repro.core.distributed import ExchangeConfig
+    from repro.utils.deprecation import warn_deprecated
+
+    if args.exchange is not None:
+        ex = ExchangeConfig.parse(args.exchange)
+        codec = ex.scheme.codec.name
+        if args.codec is not None and args.codec != codec:
+            raise SystemExit(f"--codec {args.codec} conflicts with "
+                             f"--exchange {args.exchange!r} (codec "
+                             f"{codec}); drop the deprecated --codec")
+    else:
+        if args.codec is not None:
+            warn_deprecated("--codec is deprecated; use "
+                            "--exchange compressed:<codec>")
+        codec = args.codec or "f32"
+    args.codec = codec
 
     cfg = get_config(args.arch)
     if args.reduced:

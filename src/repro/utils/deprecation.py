@@ -1,0 +1,27 @@
+"""Repro's own deprecation channel.
+
+Deprecated surfaces (the scattered ``comm_scheme=``/``exchange_mode=``
+knobs replaced by :class:`repro.core.distributed.ExchangeConfig`, the
+``get_scheme``/``get_mode`` lookups) warn through a *dedicated*
+``DeprecationWarning`` subclass so the test suite can turn exactly these
+warnings — and not the interpreter's or jax's — into errors
+(``filterwarnings = error::repro.utils.deprecation.ReproDeprecationWarning``
+in pyproject.toml). That lint is what keeps the old spellings from
+creeping back into the repo's own code and tests while third-party
+deprecation noise stays non-fatal.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """A deprecated repro API surface was used (one release of warning
+    before removal)."""
+
+
+def warn_deprecated(message: str, *, stacklevel: int = 3) -> None:
+    """Emit a :class:`ReproDeprecationWarning` pointing at the caller's
+    caller (the default ``stacklevel=3`` skips this helper and the
+    deprecated shim itself)."""
+    warnings.warn(message, ReproDeprecationWarning, stacklevel=stacklevel)

@@ -184,15 +184,31 @@ def test_smoke_tier_end_to_end(tmp_path):
     # drivers must cover the full matrix: 3 algorithms x both execution
     # drivers x every transport-x-codec scheme x both exchange modes
     # (72 rows — the 36 modelled-bytes cells each run on both drivers)
+    # ... plus the regime cells (full ExchangeConfig specs: straggler,
+    # bounded staleness, elastic membership), whose sharded leg is
+    # skipped on a device-starved mesh (membership events name absolute
+    # worker indices the smaller mesh cannot host)
+    from benchmarks.bench_drivers import REGIME_CELLS
+    from repro.core import ExchangeConfig
+
     got = {(r["algorithm"], r["driver"], r["scheme"], r["mode"])
            for r in by["drivers"].rows}
-    assert got == {(a, d, s, m)
-                   for a in ("cocoa", "minibatch_scd", "minibatch_sgd")
-                   for d in ("virtual", "sharded")
-                   for s in ("persistent", "spark_faithful",
-                             "compressed:f32", "compressed:int8",
-                             "compressed:int4", "reduce_scatter")
-                   for m in ("sync", "stale")}
+    k_sh = by["drivers"].params["K_sharded"]
+    k_virt = by["drivers"].params["K_virtual"]
+    expected = {(a, d, s, m)
+                for a in ("cocoa", "minibatch_scd", "minibatch_sgd")
+                for d in ("virtual", "sharded")
+                for s in ("persistent", "spark_faithful",
+                          "compressed:f32", "compressed:int8",
+                          "compressed:int4", "reduce_scatter")
+                for m in ("sync", "stale")}
+    for algo, spec in REGIME_CELLS:
+        ex = ExchangeConfig.parse(spec)
+        drivers = (("virtual", "sharded")
+                   if ex.membership.empty or k_sh == k_virt
+                   else ("virtual",))
+        expected |= {(algo, d, spec, ex.mode.spec) for d in drivers}
+    assert got == expected
     # every compressed row is labelled with its codec
     assert {r["codec"] for r in by["drivers"].rows
             if r["scheme"].startswith("compressed")} == {"f32", "int8",

@@ -86,12 +86,19 @@ def test_minibatch_scd_first_class_converges(problem_data):
 
 def test_config_rejects_unknown_comm_scheme():
     """A typo'd scheme must raise, not silently run persistent."""
+    with pytest.raises(ValueError, match="unknown exchange spec segment"):
+        CoCoAConfig(exchange="persistant")
+    with pytest.raises(ValueError, match="unknown exchange spec segment"):
+        SGDConfig(exchange="spark")
+    for scheme in COMM_SCHEMES:  # the real set all validate
+        CoCoAConfig(exchange=scheme)
+    # the deprecated comm_scheme= spelling still works — under a warning
+    with pytest.warns(DeprecationWarning, match="comm_scheme"):
+        cfg = CoCoAConfig(comm_scheme="compressed")
+    assert cfg.exchange.scheme.codec.name == "int8"
+    # and a typo through the deprecated spelling still raises
     with pytest.raises(ValueError, match="unknown comm scheme"):
         CoCoAConfig(comm_scheme="persistant")
-    with pytest.raises(ValueError, match="unknown comm scheme"):
-        SGDConfig(comm_scheme="spark")
-    for scheme in COMM_SCHEMES:  # the real set all validate
-        CoCoAConfig(comm_scheme=scheme)
 
 
 def test_comm_bytes_match_scheme_dtypes(problem_data):
@@ -100,7 +107,7 @@ def test_comm_bytes_match_scheme_dtypes(problem_data):
     4-byte scale for compressed; spark_faithful adds the alpha blocks."""
     A, b, _ = problem_data
     m, n, K = A.shape[0], A.shape[1], 8
-    by = {s: CoCoATrainer(CoCoAConfig(K=K, comm_scheme=s), A, b)
+    by = {s: CoCoATrainer(CoCoAConfig(K=K, exchange=s), A, b)
           for s in COMM_SCHEMES}
     n_pad = by["persistent"].part.n_padded
     assert by["persistent"].comm_bytes_per_round() == 2 * K * m * 4
@@ -108,10 +115,10 @@ def test_comm_bytes_match_scheme_dtypes(problem_data):
             == 2 * K * m * 4 + 2 * K * n_pad * 4)
     assert by["compressed"].comm_bytes_per_round() == 2 * K * (m + 4)
     # codec-composed schemes: the transport is priced per wire codec
-    int4 = CoCoATrainer(CoCoAConfig(K=K, comm_scheme="compressed:int4"),
+    int4 = CoCoATrainer(CoCoAConfig(K=K, exchange="compressed:int4"),
                         A, b)
     assert int4.comm_bytes_per_round() == 2 * K * (-(-m // 2) + 4)
-    sgd = {s: MinibatchSGD(SGDConfig(K=K, comm_scheme=s), A, b)
+    sgd = {s: MinibatchSGD(SGDConfig(K=K, exchange=s), A, b)
            for s in COMM_SCHEMES}
     assert sgd["persistent"].comm_bytes_per_round() == 2 * K * n * 4
     assert sgd["compressed"].comm_bytes_per_round() == 2 * K * (n + 4)
@@ -165,7 +172,7 @@ def test_compressed_communication_converges(problem_data):
     must not break CoCoA's convergence (inexact local solutions are
     within the framework's tolerance)."""
     A, b, _ = problem_data
-    tr = CoCoATrainer(CoCoAConfig(K=8, H=256, comm_scheme="compressed"),
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=256, exchange="compressed"),
                       A, b)
     hist = tr.run(rounds=120, record_every=10, target_eps=1e-3)
     assert hist.subopt[-1] <= 1e-3

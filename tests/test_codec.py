@@ -10,34 +10,34 @@ import numpy as np
 import pytest
 
 from repro.comm import CODECS, UpdateCodec, get_codec
-from repro.core.distributed import COMM_TRANSPORTS, get_scheme
+from repro.core.distributed import COMM_TRANSPORTS, CommScheme
 from repro.optim.local_updates import (LocalUpdatesConfig, delta_wire_bytes,
                                        suggest_H)
 
 
 # ---------------------------------------------------------------- parsing
 def test_scheme_parses_transport_and_codec():
-    assert get_scheme("persistent").transport == "persistent"
-    assert get_scheme("persistent").codec.name == "f32"
+    assert CommScheme.parse("persistent").transport == "persistent"
+    assert CommScheme.parse("persistent").codec.name == "f32"
     # bare "compressed" aliases the pre-codec int8 path
-    assert get_scheme("compressed").codec.name == "int8"
-    assert get_scheme("compressed:int8").codec.name == "int8"
-    assert get_scheme("compressed:int4").codec.name == "int4"
-    assert get_scheme("compressed:f32").codec.name == "f32"
+    assert CommScheme.parse("compressed").codec.name == "int8"
+    assert CommScheme.parse("compressed:int8").codec.name == "int8"
+    assert CommScheme.parse("compressed:int4").codec.name == "int4"
+    assert CommScheme.parse("compressed:f32").codec.name == "f32"
     for transport in COMM_TRANSPORTS:
-        assert get_scheme(transport).transport == transport
+        assert CommScheme.parse(transport).transport == transport
 
 
 def test_scheme_rejects_bad_codec_compositions():
     with pytest.raises(ValueError, match="unknown comm scheme"):
-        get_scheme("persistant")
+        CommScheme.parse("persistant")
     with pytest.raises(ValueError, match="unknown update codec"):
-        get_scheme("compressed:int2")
+        CommScheme.parse("compressed:int2")
     # exact transports move f32 by construction — no codec suffix
     for scheme in ("persistent:int8", "reduce_scatter:int4",
                    "spark_faithful:f32"):
         with pytest.raises(ValueError, match="codec suffix"):
-            get_scheme(scheme)
+            CommScheme.parse(scheme)
 
 
 def test_get_codec_registry():
@@ -62,13 +62,13 @@ def test_compressed_scheme_bytes_scale_with_codec(L, K):
     """2 * K * wire_bytes for every codec under the compressed
     transport — the number the drivers benchmark pins to the HLO."""
     for codec in ("f32", "int8", "int4"):
-        scheme = get_scheme(f"compressed:{codec}")
+        scheme = CommScheme.parse(f"compressed:{codec}")
         assert (scheme.bytes_per_round(L, K)
                 == 2 * K * get_codec(codec).wire_bytes(L))
     # and the compression ladder is strictly ordered
-    assert (get_scheme("compressed:int4").bytes_per_round(L, K)
-            < get_scheme("compressed:int8").bytes_per_round(L, K)
-            < get_scheme("compressed:f32").bytes_per_round(L, K))
+    assert (CommScheme.parse("compressed:int4").bytes_per_round(L, K)
+            < CommScheme.parse("compressed:int8").bytes_per_round(L, K)
+            < CommScheme.parse("compressed:f32").bytes_per_round(L, K))
 
 
 def test_timemodel_charges_codec_bytes():
@@ -81,7 +81,8 @@ def test_timemodel_charges_codec_bytes():
     link = synthetic_link(1e9, 0.0)
     times = {}
     for codec in ("f32", "int8", "int4"):
-        nbytes = get_scheme(f"compressed:{codec}").bytes_per_round(4096, 8)
+        nbytes = CommScheme.parse(
+            f"compressed:{codec}").bytes_per_round(4096, 8)
         model = TimeModel(PROFILES["E_mpi"], nbytes, link)
         times[codec] = model.comm_time_s()
     assert times["int4"] < times["int8"] < times["f32"]
@@ -96,7 +97,7 @@ def test_sweep_cfg_accepts_codec_schemes():
     from repro.data import make_glm_data
 
     A, b, _ = make_glm_data(m=48, n=96, density=0.3, seed=1)
-    tr = CoCoATrainer(CoCoAConfig(K=4, H=8, comm_scheme="compressed:int4"),
+    tr = CoCoATrainer(CoCoAConfig(K=4, H=8, exchange="compressed:int4"),
                       A, b)
     assert tr.comm_bytes_per_round() == 2 * 4 * (24 + 4)
     hist = tr.run(3, record_every=3)

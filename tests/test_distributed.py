@@ -1,6 +1,7 @@
 """Multi-device tests (subprocess with faked host devices): shard_map
-CoCoA driver, the sync/stale exchange-mode contract, expert-parallel
-MoE, local-update rounds, and a dry-run smoke on the production mesh —
+CoCoA driver, the sync/stale exchange-mode contract (all staleness
+bounds k), elastic worker membership, expert-parallel MoE,
+local-update rounds, and a dry-run smoke on the production mesh —
 plus the in-process codec round-trip property test over ALL wire codecs
 (f32 / int8 / packed int4; hypothesis when installed, a deterministic
 seed battery otherwise; NOT a module-wide importorskip, so the rest of
@@ -58,7 +59,7 @@ def _codec_paths(codec_name: str):
     from jax.sharding import PartitionSpec as P
 
     from repro.comm import get_codec
-    from repro.core.distributed import get_scheme
+    from repro.core.distributed import CommScheme
     from repro.utils import compat
 
     codec = get_codec(codec_name)
@@ -73,7 +74,7 @@ def _codec_paths(codec_name: str):
         lambda d: codec.decode(codec.encode(d[0]), d.shape[-1])[None],
         mesh, in_specs=P("workers"), out_specs=P("workers")))
     agg_path = jax.jit(
-        get_scheme(f"compressed:{codec_name}").all_reduce_stacked)
+        CommScheme.parse(f"compressed:{codec_name}").all_reduce_stacked)
     sum_path = jax.jit(lambda rows: jax.numpy.sum(rows, axis=0))
     scales_path = jax.jit(lambda d: jax.vmap(codec.encode)(d)[-1])
     return vmap_path, shard_path, agg_path, sum_path, scales_path
@@ -246,7 +247,7 @@ def test_compressed_int8_bit_identical_to_legacy_quantizer():
     import jax
     import jax.numpy as jnp
 
-    from repro.core.distributed import get_scheme
+    from repro.core.distributed import CommScheme
 
     @jax.jit
     def legacy_stacked(updates):
@@ -257,8 +258,8 @@ def test_compressed_int8_bit_identical_to_legacy_quantizer():
         q, scale = jax.vmap(q1)(updates)
         return jnp.sum(q.astype(jnp.float32) * scale[:, None], axis=0)
 
-    aliased = jax.jit(get_scheme("compressed").all_reduce_stacked)
-    named = jax.jit(get_scheme("compressed:int8").all_reduce_stacked)
+    aliased = jax.jit(CommScheme.parse("compressed").all_reduce_stacked)
+    named = jax.jit(CommScheme.parse("compressed:int8").all_reduce_stacked)
     for seed in range(20):
         dv = jnp.asarray(_random_update_stack(seed), jnp.float32)
         want = np.asarray(legacy_stacked(dv))
@@ -278,7 +279,7 @@ def test_compressed_alias_trajectory_bit_identical():
     finals = {}
     for scheme in ("compressed", "compressed:int8"):
         tr = CoCoATrainer(CoCoAConfig(K=4, H=32, seed=0,
-                                      comm_scheme=scheme), A, b)
+                                      exchange=scheme), A, b)
         tr.run(6, record_every=6)
         finals[scheme] = (tr.alpha_final, tr.w_final)
     assert np.array_equal(finals["compressed"][0],
@@ -312,7 +313,7 @@ from repro.utils.compat import make_mesh
 A, b, _ = make_glm_data(m=128, n=256, density=0.3, seed=1)
 texts = {}
 for scheme in ("persistent", "spark_faithful"):
-    tr = CoCoATrainer(CoCoAConfig(K=8, H=32, comm_scheme=scheme), A, b)
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=32, exchange=scheme), A, b)
     mesh = make_mesh((8,), ("workers",))
     rf = tr.build_sharded_round(mesh)
     alpha, w = tr.init_state()
@@ -340,8 +341,8 @@ def make(algo, scheme):
     if algo == "minibatch_sgd":
         return MinibatchSGD(SGDConfig(batch_frac=1.0, step_size=0.1,
                                       lam=1.0, K=4, seed=0,
-                                      comm_scheme=scheme), A, b)
-    cfg = CoCoAConfig(K=4, H=64, comm_scheme=scheme, seed=0)
+                                      exchange=scheme), A, b)
+    cfg = CoCoAConfig(K=4, H=64, exchange=scheme, seed=0)
     return (MinibatchSCD if algo == "minibatch_scd" else CoCoATrainer)(cfg, A, b)
 for algo in ("cocoa", "minibatch_scd", "minibatch_sgd"):
     for scheme in COMM_SCHEMES:
@@ -360,10 +361,12 @@ def test_single_round_stale_equals_sync_all_algorithms_both_drivers():
     """Regression pin on the delayed apply's off-by-one: with exactly
     one round there is nothing to be stale about — the flushed `stale`
     iterate must be IDENTICAL to the `sync` iterate for all 3 algorithms
-    on both drivers (same per-worker RNG, same aggregate, applied once
-    either way). A stale run that drops or double-applies the pending
-    aggregate fails this immediately. Multi-round trajectories must then
-    genuinely diverge (the knob does something)."""
+    on both drivers, for EVERY staleness bound k (same per-worker RNG,
+    same aggregate, applied once either way; the flush absorbs however
+    many slots are pending). A stale run that drops or double-applies a
+    pending aggregate fails this immediately. Multi-round trajectories
+    must then genuinely diverge (the knob does something), and deeper k
+    must diverge from k=1 too."""
     _run("""
 import numpy as np
 from repro.data import make_glm_data
@@ -374,8 +377,8 @@ def make(algo, mode):
     if algo == "minibatch_sgd":
         return MinibatchSGD(SGDConfig(batch_frac=1.0, step_size=0.1,
                                       lam=1.0, K=4, seed=0,
-                                      exchange_mode=mode), A, b)
-    cfg = CoCoAConfig(K=4, H=64, seed=0, exchange_mode=mode)
+                                      exchange=mode), A, b)
+    cfg = CoCoAConfig(K=4, H=64, seed=0, exchange=mode)
     return (MinibatchSCD if algo == "minibatch_scd" else CoCoATrainer)(cfg, A, b)
 for algo in ("cocoa", "minibatch_scd", "minibatch_sgd"):
     for driver in ("virtual", "sharded"):
@@ -385,32 +388,37 @@ for algo in ("cocoa", "minibatch_scd", "minibatch_sgd"):
             return (tr.run_workers(rounds, record_every=1)
                     if algo == "minibatch_sgd"
                     else tr.run(rounds, record_every=1))
-        ts, tt = make(algo, "sync"), make(algo, "stale")
-        run1(ts); run1(tt)
-        assert np.array_equal(ts.alpha_final, tt.alpha_final), (
-            algo, driver, "alpha drift after 1 round")
-        if algo != "minibatch_sgd":  # CoCoA-family: shared residual too
-            assert np.array_equal(ts.w_final, tt.w_final), (
-                algo, driver, "w drift after 1 round")
-    # with >1 round the one-round-delayed apply must actually change
-    # the trajectory (otherwise the knob is a no-op)
-    ts, tt = make(algo, "sync"), make(algo, "stale")
-    hs = (ts.run_workers(5, record_every=5) if algo == "minibatch_sgd"
-          else ts.run(5, record_every=5))
-    ht = (tt.run_workers(5, record_every=5) if algo == "minibatch_sgd"
-          else tt.run(5, record_every=5))
-    assert not np.array_equal(ts.alpha_final, tt.alpha_final), (
+        ts = make(algo, "sync"); run1(ts)
+        for stale in ("stale", "stale:k=2", "stale:k=3"):
+            tt = make(algo, stale); run1(tt)
+            assert np.array_equal(ts.alpha_final, tt.alpha_final), (
+                algo, driver, stale, "alpha drift after 1 round")
+            if algo != "minibatch_sgd":  # CoCoA-family: shared residual
+                assert np.array_equal(ts.w_final, tt.w_final), (
+                    algo, driver, stale, "w drift after 1 round")
+    # with >1 round the delayed apply must actually change the
+    # trajectory (otherwise the knob is a no-op), and k=2 must be a
+    # genuinely deeper delay than k=1
+    finals = {}
+    for mode in ("sync", "stale", "stale:k=2"):
+        tr = make(algo, mode)
+        (tr.run_workers(5, record_every=5) if algo == "minibatch_sgd"
+         else tr.run(5, record_every=5))
+        finals[mode] = np.asarray(tr.alpha_final)
+    assert not np.array_equal(finals["sync"], finals["stale"]), (
         algo, "stale trajectory identical to sync after 5 rounds")
+    assert not np.array_equal(finals["stale"], finals["stale:k=2"]), (
+        algo, "stale:k=2 trajectory identical to k=1 after 5 rounds")
 print("OK")
 """, ndev=4, timeout=560)
 
 
 def test_stale_driver_agreement_and_same_collectives():
     """The exchange-mode contract on the sharded driver: under `stale`
-    the virtual and sharded drivers still follow the same trajectory for
-    every comm scheme, and staleness never changes what the collectives
-    move — the optimized HLO's collective traffic is byte-for-byte the
-    same as the sync round's."""
+    (any bound k) the virtual and sharded drivers still follow the same
+    trajectory for every comm scheme, and staleness never changes what
+    the collectives move — the optimized HLO's collective traffic is
+    byte-for-byte the same as the sync round's."""
     _run("""
 import numpy as np, jax.random as jr
 from repro.data import make_glm_data
@@ -427,20 +435,79 @@ def traffic(tr):
     s = parse_collectives(txt)
     return {k: v[1] for k, v in s.by_kind.items()}
 for scheme in COMM_SCHEMES:
-    tv = CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme, seed=0,
-                                  exchange_mode="stale"), A, b)
-    hv = tv.run(8, record_every=8)
-    ts = CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme, seed=0,
-                                  exchange_mode="stale"), A, b)
+    for stale in ("stale", "stale:k=2"):
+        spec = scheme + "/" + stale
+        tv = CoCoATrainer(CoCoAConfig(K=4, H=64, seed=0, exchange=spec),
+                          A, b)
+        hv = tv.run(8, record_every=8)
+        ts = CoCoATrainer(CoCoAConfig(K=4, H=64, seed=0, exchange=spec),
+                          A, b)
+        hs = ts.run_sharded(8, record_every=8)
+        rel = abs(hv.primal[-1] - hs.primal[-1]) / abs(hv.primal[-1])
+        assert rel < 1e-4, (spec, hv.primal, hs.primal)
+        t_sync = traffic(CoCoATrainer(CoCoAConfig(K=4, H=64, seed=0,
+                                                  exchange=scheme), A, b))
+        t_stale = traffic(CoCoATrainer(CoCoAConfig(K=4, H=64, seed=0,
+                                                   exchange=spec), A, b))
+        assert t_sync == t_stale, (spec, t_sync, t_stale)
+print("OK")
+""", ndev=4, timeout=560)
+
+
+def test_elastic_membership_virtual_vs_sharded():
+    """The elastic-membership contract: with workers dropping and
+    rejoining at configured rounds the virtual and sharded drivers
+    still follow the same trajectory (the live mask is applied
+    identically inside both), including when composed with a staleness
+    bound and a quantizing codec — and membership adds NO collectives
+    to the compiled round (one compile serves every round; liveness is
+    an elementwise mask, so the HLO traffic matches the always-live
+    program byte-for-byte)."""
+    _run("""
+import dataclasses
+import numpy as np, jax.random as jr
+from repro.data import make_glm_data
+from repro.core import (CoCoAConfig, CoCoATrainer, ExchangeConfig,
+                        MembershipSchedule, MinibatchSGD, SGDConfig)
+from repro.utils.hlo import parse_collectives
+from repro.utils.compat import make_mesh
+A, b, _ = make_glm_data(m=96, n=256, density=0.2, zipf_a=1.1, seed=42)
+mesh = make_mesh((4,), ("workers",))
+def make(algo, spec):
+    if algo == "minibatch_sgd":
+        return MinibatchSGD(SGDConfig(batch_frac=1.0, step_size=0.1,
+                                      lam=1.0, K=4, seed=0,
+                                      exchange=spec), A, b)
+    return CoCoATrainer(CoCoAConfig(K=4, H=64, seed=0, exchange=spec),
+                        A, b)
+def traffic(tr):
+    rf = tr.build_sharded_round(mesh)
+    local, shared = tr.init_state()
+    txt = rf.jitted.lower(rf.split_keys(jr.key(0)),
+                          local, shared, 1).compile().as_text()
+    return {k: v[1] for k, v in parse_collectives(txt).by_kind.items()}
+CASES = (("cocoa", "persistent/drop:1@2-4"),
+         ("cocoa", "compressed:int8/stale:k=2/drop:0@1-2"),
+         ("minibatch_sgd", "persistent/drop:2@3"),
+         ("minibatch_sgd", "compressed:int4/drop:1@2-4"))
+for algo, spec in CASES:
+    tv = make(algo, spec)
+    hv = (tv.run_workers(8, record_every=8) if algo == "minibatch_sgd"
+          else tv.run(8, record_every=8))
+    ts = make(algo, spec)
     hs = ts.run_sharded(8, record_every=8)
     rel = abs(hv.primal[-1] - hs.primal[-1]) / abs(hv.primal[-1])
-    assert rel < 1e-4, (scheme, hv.primal, hs.primal)
-    t_sync = traffic(CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme,
-                                              seed=0), A, b))
-    t_stale = traffic(CoCoATrainer(CoCoAConfig(K=4, H=64, comm_scheme=scheme,
-                                               seed=0,
-                                               exchange_mode="stale"), A, b))
-    assert t_sync == t_stale, (scheme, t_sync, t_stale)
+    assert rel < 1e-4, (algo, spec, hv.primal, hs.primal)
+    # the drop must actually bite: trajectory differs from always-live
+    base_spec = dataclasses.replace(ExchangeConfig.parse(spec),
+                                    membership=MembershipSchedule())
+    always = make(algo, base_spec)
+    (always.run_workers(8, record_every=8) if algo == "minibatch_sgd"
+     else always.run(8, record_every=8))
+    assert not np.array_equal(np.asarray(tv.alpha_final),
+                              np.asarray(always.alpha_final)), (algo, spec)
+    # ... without adding or resizing any collective
+    assert traffic(make(algo, spec)) == traffic(always), (algo, spec)
 print("OK")
 """, ndev=4, timeout=560)
 
@@ -479,7 +546,7 @@ def test_compressed_quantizer_bit_identical_across_drivers():
     _run("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.core.distributed import (get_scheme, quantize_update,
+from repro.core.distributed import (CommScheme, quantize_update,
                                     dequantize_update)
 from repro.utils.compat import make_mesh, shard_map
 K, m = 4, 96
@@ -494,7 +561,7 @@ f = shard_map(lambda d: dequantize_update(*quantize_update(d[0]))[None],
 shrd = jax.jit(f)(dv)
 assert np.array_equal(np.asarray(virt), np.asarray(shrd)), "per-worker drift"
 # the aggregated update the round actually applies
-scheme = get_scheme("compressed")
+scheme = CommScheme.parse("compressed")
 agg_v = scheme.all_reduce_stacked(dv)
 g = shard_map(lambda d: scheme.all_reduce(d[0], "workers"), mesh,
               in_specs=P("workers"), out_specs=P(None))
@@ -640,7 +707,7 @@ import numpy as np, jax, jax.random as jr, re
 from repro.data import make_glm_data
 from repro.core import CoCoAConfig, CoCoATrainer
 A, b, _ = make_glm_data(m=128, n=256, density=0.3, seed=1)
-tr = CoCoATrainer(CoCoAConfig(K=8, H=32, comm_scheme="compressed"), A, b)
+tr = CoCoATrainer(CoCoAConfig(K=8, H=32, exchange="compressed"), A, b)
 from repro.utils.compat import make_mesh
 mesh = make_mesh((8,), ("workers",))
 rf = tr.build_sharded_round(mesh)

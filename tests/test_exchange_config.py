@@ -1,0 +1,328 @@
+"""The unified ExchangeConfig surface: spec-grammar round-trips and
+typed errors, the deprecated-knob folding (configs and module-level
+lookups), straggler-profile determinism and barrier-factor formulas,
+elastic-membership masks, and the bounded-staleness queue semantics
+pinned against a plain-Python serial replay (flush under k>1, no
+aggregate silently lost across a mid-flight worker drop).
+
+The multi-device (shard_map) legs of these contracts live in
+tests/test_distributed.py; everything here is in-process.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (COMM_SCHEMES, CoCoAConfig, CoCoATrainer,
+                        ExchangeConfig, ExchangeMode, MembershipSchedule,
+                        SGDConfig, StragglerProfile, get_mode, get_scheme,
+                        resolve_exchange)
+from repro.core.distributed import (CommScheme, build_virtual_round,
+                                    finish_run, init_exchange_state)
+from repro.data import make_glm_data
+
+
+# ----------------------------------------------------------------- grammar
+ROUNDTRIP_SPECS = (
+    "persistent",
+    "compressed:int4",
+    "persistent/stale",
+    "compressed:int4/stale:k=2",
+    "spark_faithful/straggler:det(slow=4)",
+    "persistent/straggler:mix(p=0.1,slow=8)",
+    "reduce_scatter/straggler:lognormal(sigma=0.5)",
+    "persistent/drop:1@5",
+    "compressed:int8/stale:k=3/straggler:mix(p=0.1,slow=8)/drop:1@5-9",
+    "persistent/drop:1@5-9/drop:3@7",
+)
+
+
+@pytest.mark.parametrize("spec", ROUNDTRIP_SPECS)
+def test_exchange_spec_roundtrips(spec):
+    ex = ExchangeConfig.parse(spec)
+    assert ex.spec == spec
+    assert ExchangeConfig.parse(ex.spec) == ex
+    assert str(ex) == spec
+
+
+def test_exchange_spec_segments_are_order_independent():
+    a = ExchangeConfig.parse("compressed:int4/stale:k=2/drop:1@5")
+    b = ExchangeConfig.parse("drop:1@5/stale:k=2/compressed:int4")
+    assert a == b
+    # ... and the canonical spelling always leads with the scheme
+    assert b.spec == "compressed:int4/stale:k=2/drop:1@5"
+
+
+def test_exchange_spec_defaults_elided():
+    assert ExchangeConfig.parse("persistent/sync").spec == "persistent"
+    assert ExchangeConfig().spec == "persistent"
+    ex = ExchangeConfig.parse("stale:k=2")
+    assert ex.scheme.name == "persistent" and ex.mode.k == 2
+
+
+def test_exchange_parse_passes_through_typed_values():
+    ex = ExchangeConfig.parse("compressed:int4/stale:k=2")
+    assert ExchangeConfig.parse(ex) is ex
+    assert (ExchangeConfig.parse(CommScheme.parse("compressed:int4")).scheme
+            == CommScheme.parse("compressed:int4"))
+    assert ExchangeConfig.parse(ExchangeMode.parse("stale:k=2")).mode.k == 2
+    # constructor convenience: components may be given as strings
+    ex2 = ExchangeConfig(scheme="compressed:int4", mode="stale:k=2",
+                         straggler="mix(p=0.1,slow=8)",
+                         membership="drop:1@5")
+    assert ex2.spec == ("compressed:int4/stale:k=2/"
+                        "straggler:mix(p=0.1,slow=8)/drop:1@5")
+
+
+def test_exchange_spec_typed_errors():
+    with pytest.raises(ValueError, match="unknown exchange spec segment"):
+        ExchangeConfig.parse("persistant")
+    with pytest.raises(ValueError, match="the grammar is"):
+        ExchangeConfig.parse("persistent/async")
+    # a codec typo under a known transport head is a codec error
+    with pytest.raises(ValueError, match="unknown update codec"):
+        ExchangeConfig.parse("compressed:int2")
+    with pytest.raises(ValueError, match="duplicate comm-scheme"):
+        ExchangeConfig.parse("persistent/compressed")
+    with pytest.raises(ValueError, match="duplicate exchange-mode"):
+        ExchangeConfig.parse("sync/stale")
+    with pytest.raises(ValueError, match="duplicate straggler"):
+        ExchangeConfig.parse("straggler:det/straggler:mix")
+    with pytest.raises(ValueError, match="unknown exchange mode"):
+        ExchangeMode.parse("stale:k=x")
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        ExchangeMode.parse("stale:k=0")
+    with pytest.raises(ValueError, match="'sync' takes no staleness"):
+        ExchangeMode("sync", k=2)
+    with pytest.raises(ValueError, match="unknown straggler profile"):
+        StragglerProfile.parse("pareto")
+    with pytest.raises(ValueError, match="takes .* parameters"):
+        StragglerProfile.parse("det(p=0.5)")
+    with pytest.raises(ValueError, match="is not a number"):
+        StragglerProfile.parse("mix(p=lots)")
+    with pytest.raises(ValueError, match="malformed membership segment"):
+        MembershipSchedule.parse("drop:1@")
+    with pytest.raises(ValueError, match="last >= first"):
+        MembershipSchedule.parse("drop:1@9-5")
+
+
+# ------------------------------------------------- deprecated spellings
+def test_module_level_lookups_warn_but_work():
+    with pytest.warns(DeprecationWarning, match="get_scheme"):
+        s = get_scheme("compressed:int4")
+    assert s == CommScheme.parse("compressed:int4")
+    with pytest.warns(DeprecationWarning, match="get_mode"):
+        m = get_mode("stale")
+    assert m == ExchangeMode.parse("stale")
+
+
+def test_resolve_exchange_folding_rules():
+    # legacy-only non-default values fold under ONE warning
+    with pytest.warns(DeprecationWarning, match="comm_scheme"):
+        ex = resolve_exchange(comm_scheme="compressed", exchange_mode="stale")
+    assert ex.spec == "compressed/stale"
+    # exchange authoritative + agreeing legacy ride-along: silent
+    # (filterwarnings=error would fail this test if it warned)
+    ex2 = resolve_exchange("compressed/stale", comm_scheme="compressed",
+                           exchange_mode="stale")
+    assert ex2 == ex
+    # ... but a disagreeing legacy knob is a hard error, not a guess
+    with pytest.raises(ValueError, match="drop the deprecated"):
+        resolve_exchange("compressed/stale", comm_scheme="persistent")
+    with pytest.raises(ValueError, match="drop the deprecated"):
+        resolve_exchange("persistent/stale:k=2", exchange_mode="stale")
+    # default legacy values never warn
+    assert resolve_exchange(comm_scheme="persistent",
+                            exchange_mode="sync").spec == "persistent"
+
+
+def test_config_folds_and_replace_stays_silent():
+    A, b, _ = make_glm_data(m=32, n=64, density=0.4, seed=0)
+    cfg = CoCoAConfig(K=4, H=8, exchange="compressed:int4/stale:k=2")
+    assert cfg.exchange.spec == "compressed:int4/stale:k=2"
+    # the canonical legacy fields are kept in sync for introspection
+    assert cfg.comm_scheme == "compressed:int4"
+    assert cfg.exchange_mode == "stale:k=2"
+    # dataclasses.replace re-passes those canonical values: it must
+    # neither warn (error filter) nor change the exchange
+    cfg2 = dataclasses.replace(cfg, H=16)
+    assert cfg2.exchange == cfg.exchange and cfg2.H == 16
+    sgd = SGDConfig(K=4, exchange="persistent/drop:2@3")
+    assert dataclasses.replace(sgd, step_size=0.2).exchange == sgd.exchange
+    # the membership schedule is validated against K at trainer build
+    with pytest.raises(ValueError, match="only K=4 workers"):
+        CoCoATrainer(CoCoAConfig(K=4, H=8, exchange="persistent/drop:7@2"),
+                     A, b)
+
+
+# ------------------------------------------------------------ stragglers
+def test_straggler_barrier_factor_formulas():
+    assert StragglerProfile().expected_barrier_mult(8) == 1.0
+    assert StragglerProfile.parse("det(slow=16)").expected_barrier_mult(4) \
+        == 16.0
+    mix = StragglerProfile.parse("mix(p=0.5,slow=16)")
+    assert mix.expected_barrier_mult(4) == pytest.approx(
+        1 + 15 * (1 - 0.5 ** 4))  # 15.0625
+    # more workers -> more likely someone straggles, monotone in K
+    assert (mix.expected_barrier_mult(8) > mix.expected_barrier_mult(4)
+            > mix.expected_barrier_mult(1) == 1 + 15 * 0.5)
+    logn = StragglerProfile.parse("lognormal(sigma=0.5)")
+    m4, m8 = logn.expected_barrier_mult(4), logn.expected_barrier_mult(8)
+    assert 1.0 < m4 < m8 < 16.0
+    # fixed-seed Monte Carlo: deterministic across calls
+    assert logn.expected_barrier_mult(4) == m4
+    with pytest.raises(ValueError, match="K >= 1"):
+        logn.expected_barrier_mult(0)
+
+
+def test_straggler_multipliers_deterministic_per_round_key():
+    prof = StragglerProfile.parse("mix(p=0.5,slow=8)")
+    key = jax.random.key(7)
+    m1 = np.asarray(prof.multipliers(key, 8))
+    assert m1.shape == (8,) and set(np.unique(m1)) <= {1.0, 8.0}
+    assert np.array_equal(m1, np.asarray(prof.multipliers(key, 8)))
+    assert not np.array_equal(
+        m1, np.asarray(prof.multipliers(jax.random.key(8), 8)))
+    det = np.asarray(StragglerProfile.parse("det(slow=3)")
+                     .multipliers(key, 4))
+    assert np.array_equal(det, [3.0, 1.0, 1.0, 1.0])
+    bm = np.asarray(prof.barrier_mults(key, 8, rounds=5))
+    assert bm.shape == (5,) and set(np.unique(bm)) <= {1.0, 8.0}
+
+
+def test_straggler_profile_is_numerically_inert_in_the_driver():
+    """The drivers' contract: under a bulk-synchronous barrier a
+    straggler profile changes wall-clock only — bit-identical
+    trajectory with and without it."""
+    A, b, _ = make_glm_data(m=48, n=96, density=0.3, seed=1)
+    finals = {}
+    for spec in ("compressed:int8/stale",
+                 "compressed:int8/stale/straggler:mix(p=0.5,slow=8)"):
+        tr = CoCoATrainer(CoCoAConfig(K=4, H=16, seed=0, exchange=spec),
+                          A, b)
+        tr.run(4, record_every=4)
+        finals[spec] = (np.asarray(tr.alpha_final), np.asarray(tr.w_final))
+    (a0, w0), (a1, w1) = finals.values()
+    assert np.array_equal(a0, a1) and np.array_equal(w0, w1)
+
+
+# ------------------------------------------------------------ membership
+def test_membership_masks_and_live_count():
+    ms = MembershipSchedule.parse("drop:1@2-4/drop:3@5")
+    assert ms.spec == "drop:1@2-4/drop:3@5"
+    want = {1: [1, 1, 1, 1], 2: [1, 0, 1, 1], 4: [1, 0, 1, 1],
+            5: [1, 1, 1, 0], 9: [1, 1, 1, 0]}
+    for t, mask in want.items():
+        assert np.array_equal(np.asarray(ms.live_mask(t, 4)), mask), t
+        assert ms.live_count(t, 4) == sum(mask), t
+    # open-ended drop: never rejoins
+    forever = MembershipSchedule.parse("drop:0@3")
+    assert forever.live_count(2, 4) == 4
+    assert forever.live_count(100, 4) == 3
+    with pytest.raises(ValueError, match="only K=2"):
+        ms.check_workers(2)
+    # the mask works under tracing (one compile serves every round)
+    traced = jax.jit(lambda t: ms.live_mask(t, 4))
+    assert np.array_equal(np.asarray(traced(2)), want[2])
+    assert np.array_equal(np.asarray(traced(5)), want[5])
+
+
+# ------------------------------- bounded staleness vs a serial replay
+class _ToyAlgo:
+    """Minimal RoundAlgorithm with round-index-dependent applies, so a
+    queue slot applied under the wrong index (or dropped, or applied
+    twice) shifts the final state detectably."""
+    live_reweight = False
+
+    def local_step(self, data_k, local_k, shared, key, t):
+        upd = 0.5 * (data_k - shared)
+        return upd, local_k + upd
+
+    def apply_update(self, shared, total, t):
+        return shared + total / (4.0 * t)
+
+    def local_metric(self, data_k, local_k, shared_new):
+        return jnp.sum((data_k - shared_new) ** 2)
+
+    def finalize_metric(self, shared_new, metric_sum):
+        return metric_sum
+
+
+def _toy_replay(data, shared0, local0, rounds, k, membership):
+    """Plain-Python reference of the bounded-stale contract: the
+    aggregate computed in round t is applied in round t+k under index
+    t (masked while no real aggregate reached the queue head), dropped
+    workers contribute exact zero and keep their state frozen, and the
+    post-run flush absorbs every still-pending aggregate."""
+    K = data.shape[0]
+    shared = shared0.astype(np.float64).copy()
+    local = local0.astype(np.float64).copy()
+    pending = [(np.zeros_like(shared), 0)] * k  # (aggregate, its round)
+    for t in range(1, rounds + 1):
+        mask = np.asarray(membership.live_mask(t, K))
+        upd = 0.5 * (data - shared[None, :]) * mask[:, None]
+        local = np.where(mask[:, None] > 0, local + upd, local)
+        total = upd.sum(axis=0)
+        agg, idx = pending[0]
+        if idx >= 1:
+            shared = shared + agg / (4.0 * idx)
+        pending = pending[1:] + [(total, t)]
+    for agg, idx in pending:
+        if idx >= 1:
+            shared = shared + agg / (4.0 * idx)
+    return shared, local
+
+
+@pytest.mark.parametrize("spec,k", [
+    ("persistent/stale", 1),
+    ("persistent/stale:k=2", 2),
+    ("persistent/stale:k=3", 3),
+    ("persistent/stale:k=2/drop:1@2-3", 2),
+    ("persistent/stale:k=3/drop:0@1-2/drop:2@4", 3),
+])
+def test_bounded_stale_matches_serial_replay(spec, k):
+    """Driver vs replay over a range of (rounds, k) shapes — including
+    rounds < k (every slot flushed while still masked), rounds == k,
+    and a worker dropping while its round-t aggregate is still in
+    flight in the queue (the flush must still absorb it: no aggregate
+    is silently lost)."""
+    rng = np.random.default_rng(5)
+    K, L = 4, 6
+    data = rng.standard_normal((K, L)).astype(np.float32)
+    shared0 = rng.standard_normal(L).astype(np.float32)
+    local0 = np.zeros((K, L), np.float32)
+    ex = ExchangeConfig.parse(spec)
+    assert ex.mode.k == k
+    algo = _ToyAlgo()
+    for rounds in (1, k, k + 2, 7):
+        rf = build_virtual_round(algo, ex, jnp.asarray(data), K=K)
+        local = jnp.asarray(local0)
+        shared = init_exchange_state(ex, jnp.asarray(shared0))
+        for t in range(1, rounds + 1):
+            local, shared, _ = rf(local, shared, jax.random.key(t), t)
+        got = np.asarray(finish_run(rf, shared, rounds))
+        want, want_local = _toy_replay(data, shared0, local0, rounds, k,
+                                       ex.membership)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5,
+                                   err_msg=f"{spec} rounds={rounds}")
+        np.testing.assert_allclose(np.asarray(local), want_local,
+                                   atol=1e-5, rtol=1e-5,
+                                   err_msg=f"{spec} rounds={rounds} local")
+
+
+def test_stale_k1_matches_pre_bounded_stale_pinned_trajectory():
+    """``stale`` and ``stale:k=1`` are the same mode object — the
+    bounded generalization must not have changed k=1's behaviour."""
+    assert ExchangeMode.parse("stale") == ExchangeMode.parse("stale:k=1")
+    A, b, _ = make_glm_data(m=48, n=96, density=0.3, seed=1)
+    finals = {}
+    for spec in ("persistent/stale", "persistent/stale:k=1"):
+        tr = CoCoATrainer(CoCoAConfig(K=4, H=16, seed=0, exchange=spec),
+                          A, b)
+        tr.run(5, record_every=5)
+        finals[spec] = np.asarray(tr.alpha_final)
+    a, b_ = finals.values()
+    assert np.array_equal(a, b_)

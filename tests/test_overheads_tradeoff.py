@@ -20,7 +20,7 @@ except ImportError:
         floats = staticmethod(lambda *a, **k: None)
 
 from repro.bench.timing import calibrate_link, synthetic_link
-from repro.core.distributed import get_scheme
+from repro.core.distributed import CommScheme
 from repro.core.overheads import PROFILES, communicated_bytes_per_round
 from repro.core.tradeoff import (HSweep, HSweepPoint, NoConvergedPointError,
                                  TimeModel, autotune_H, compute_fraction_at,
@@ -89,12 +89,12 @@ def test_communicated_bytes_reduce_scatter():
     worker each way: 2*(K-1)*len_pad*4 bytes total, always below the
     master-centric persistent scheme's 2*K*len*4."""
     K = 8
-    rs = get_scheme("reduce_scatter")
+    rs = CommScheme.parse("reduce_scatter")
     assert rs.bytes_per_round(1000, K) == 2 * (K - 1) * 1000 * 4
     # K does not divide the length: the padded vector is what moves
     assert rs.bytes_per_round(1001, K) == 2 * (K - 1) * 1008 * 4
     assert (rs.bytes_per_round(1000, K)
-            < get_scheme("persistent").bytes_per_round(1000, K))
+            < CommScheme.parse("persistent").bytes_per_round(1000, K))
     # the overheads-layer accounting agrees with the scheme
     assert (communicated_bytes_per_round(1000, 100000, K, True,
                                          scheme="reduce_scatter")
@@ -130,7 +130,7 @@ def test_time_model_scheme_ordering_fixed_H():
     m, n_state, K = 1000, 4096, 8
     link = synthetic_link(1e9, latency_s=1e-4)
     E = PROFILES["E_mpi"]
-    t = {s: TimeModel(E, get_scheme(s).bytes_per_round(
+    t = {s: TimeModel(E, CommScheme.parse(s).bytes_per_round(
             m, K, local_state_len=n_state), link).round_time(1.0, 1.0)
          for s in ("compressed", "reduce_scatter", "persistent",
                    "spark_faithful")}
@@ -146,16 +146,21 @@ def test_time_model_stale_overlap_term():
     E = PROFILES["E_mpi"]
     nbytes = 10 ** 9  # 1 s on the wire (+ the 100 us latency)
     sync = TimeModel(E, nbytes, link)
-    stale = TimeModel(E, nbytes, link, mode="stale")
+    stale = TimeModel(E, nbytes, link, exchange="stale")
     t_solver = 0.25  # E_mpi compute_mult = 1 -> t_compute = 0.25 s
     t_wire = link.seconds_for(nbytes)
     hidden = min(t_wire, E.compute_mult * t_solver)
     assert stale.round_time(t_solver, 1.0) == pytest.approx(
         sync.round_time(t_solver, 1.0) - hidden)
     # fully hidden: compute >= wire -> bare profile time, not negative
-    tiny = TimeModel(E, 10 ** 6, link, mode="stale")  # ~1.1 ms wire
+    tiny = TimeModel(E, 10 ** 6, link, exchange="stale")  # ~1.1 ms wire
     assert tiny.round_time(1.0, 1.0) == E.round_time(1.0, 1.0)
     assert tiny.comm_time_s(t_compute_s=1.0) == 0.0
+    # a k-deep pending queue hides behind k rounds of compute
+    k2 = TimeModel(E, nbytes, link, exchange="stale:k=2")
+    assert k2.comm_time_s(t_compute_s=0.4) == pytest.approx(
+        max(t_wire - 0.8, 0.0))
+    assert k2.round_time(t_solver, 1.0) <= stale.round_time(t_solver, 1.0)
     # the LinkCalibration primitive agrees
     assert link.seconds_for(nbytes, overlap_s=0.25) == pytest.approx(
         t_wire - 0.25)
@@ -166,8 +171,12 @@ def test_time_model_stale_overlap_term():
     for ts in (0.0, 0.1, 1.0, 10.0):
         assert (stale.round_time(ts, 1.0)
                 <= sync.round_time(ts, 1.0) + 1e-12)
-    with pytest.raises(ValueError, match="unknown exchange mode"):
-        TimeModel(E, mode="async")
+    with pytest.raises(ValueError, match="unknown exchange"):
+        TimeModel(E, exchange="async")
+    # the deprecated mode= knob still works — under a warning
+    with pytest.warns(DeprecationWarning, match="TimeModel.mode"):
+        old = TimeModel(E, nbytes, link, mode="stale")
+    assert old.round_time(t_solver, 1.0) == stale.round_time(t_solver, 1.0)
 
 
 def test_stale_mode_shifts_optimal_H_down_on_hideable_link():
@@ -185,13 +194,43 @@ def test_stale_mode_shifts_optimal_H_down_on_hideable_link():
                          t_ref_s=sweep.t_ref_s, points=sweep.points,
                          mode="stale",
                          comm_bytes_per_round=sweep.comm_bytes_per_round)
+    # the legacy display pair folds into the canonical spec
+    assert stale_sweep.exchange == "persistent/stale"
     h_stale, t_stale = optimal_H(
         TimeModel(E, link=link).for_sweep(stale_sweep), stale_sweep)
     assert h_stale < h_sync, (h_stale, h_sync)
     assert t_stale < t_sync
-    # for_sweep adopted the sweep's mode
-    assert TimeModel(E, link=link).for_sweep(stale_sweep).mode == "stale"
-    assert TimeModel(E, link=link).for_sweep(sweep).mode == "sync"
+    # for_sweep adopted the sweep's exchange (and with it the mode)
+    assert TimeModel(E, link=link).for_sweep(stale_sweep).exchange.mode.stale
+    assert not TimeModel(E, link=link).for_sweep(sweep).exchange.mode.stale
+
+
+def test_straggler_barrier_shifts_optimal_H_down():
+    """The straggler regime's trade, pinned deterministically: the
+    barrier stretches ONLY the compute term (E[max over K workers] x
+    t_solver), so per-round framework overhead is relatively cheaper
+    and the optimum moves toward smaller H — the opposite direction of
+    growing overhead."""
+    sweep = _toy_sweep()
+    D = PROFILES["D_pyspark_c"]  # overhead-heavy: the shift is visible
+    base = TimeModel(D)
+    strag = TimeModel(D, exchange="persistent/straggler:det(slow=64)",
+                      workers=4)
+    # det: worker 0 always runs slow x, so the barrier is exactly slow
+    assert strag.barrier_mult == pytest.approx(64.0)
+    h_base, _ = optimal_H(base, sweep)
+    h_strag, _ = optimal_H(strag, sweep)
+    assert h_strag < h_base, (h_strag, h_base)
+    # mix barrier: 1 + (slow-1) * P(any of K straggles)
+    mix = TimeModel(D, exchange="persistent/straggler:mix(p=0.5,slow=16)",
+                    workers=4)
+    assert mix.barrier_mult == pytest.approx(1 + 15 * (1 - 0.5 ** 4))
+    # straggler slack counts as overhead, never as useful compute
+    assert (strag.compute_fraction(1.0, 1.0)
+            < base.compute_fraction(1.0, 1.0))
+    # a straggler-bearing model must know K
+    with pytest.raises(ValueError, match="workers"):
+        TimeModel(D, exchange="persistent/straggler:det(slow=4)")
 
 
 def test_calibrate_link_fake_bandwidth_deterministic():
