@@ -34,7 +34,11 @@ cell — straggling is charged by TimeModel's barrier, never by the
 drivers), bounded staleness `stale:k=2`, and elastic membership
 (`drop:w@d-r`), whose live-round `comm_bytes_per_round(t)` must be
 exactly K_live/K of the full-membership traffic while the compiled
-collective — and hence the HLO bytes — is unchanged.
+collective — and hence the HLO bytes — is unchanged. BACKEND_CELLS
+extend the matrix along the collective-backend axis: each transport on
+the explicit `ring` fabric, where the derived traffic is K x the HLO's
+collective-permute operand bytes and the codec's wire dtype must ride
+every hop.
 
 `run_sharded` needs a
 multi-device mesh — `python -m repro.bench.run --smoke` fakes one via
@@ -77,6 +81,27 @@ REGIME_CELLS = (
     ("cocoa", "persistent/stale:k=2"),
     ("cocoa", "persistent/drop:1@2-4"),
     ("minibatch_sgd", "compressed:int8/drop:1@2-4"),
+)
+
+# Collective-backend cells: every transport on the explicit ppermute
+# ring (repro.comm.collectives), one per transport plus a stale ring
+# (ring bytes must be mode-independent like every other transport's).
+# The byte derivation flips: a ring round's traffic is K x the
+# collective-permute operand bytes in the HLO (each unrolled hop is one
+# ppermute op moved by all K ranks), and under `compressed` the
+# quantized wire dtypes must show up in the ppermute ops — the codec
+# payload ships through every hop. The virtual driver is
+# backend-oblivious (no collectives to swap), so `persistent/ring` is
+# asserted trajectory-identical to the `persistent` base cell there.
+# No ring x membership cell: the ring is membership-oblivious (every
+# rank relays its neighbours' parts), so the K_live byte scaling the
+# membership cells assert simply does not apply to it.
+BACKEND_CELLS = (
+    ("cocoa", "persistent/ring"),
+    ("cocoa", "compressed:int4/ring"),
+    ("minibatch_scd", "reduce_scatter/ring"),
+    ("minibatch_sgd", "spark_faithful/ring"),
+    ("cocoa", "persistent/ring/stale:k=2"),
 )
 
 # Fixed-seed rounds-to-eps bands per algorithm (smoke tier: m=96, n=256,
@@ -221,14 +246,21 @@ def _hlo_traffic(tr, round_fn):
                                 local, shared, 1).compile().as_text()
     stats = parse_collectives(txt)
     K = tr.cfg.K
-    if tr.scheme.transport == "reduce_scatter":
+    if tr.exchange.backend == "ring":
+        # every unrolled ring hop is one collective-permute op whose
+        # operand every one of the K ranks forwards; the scalar metric
+        # psum shows as an all-reduce and is simply not counted
+        _, cp_ob, _ = stats.by_kind.get("collective-permute", (0, 0, 0))
+        derived = K * cp_ob
+    elif tr.scheme.transport == "reduce_scatter":
         _, rs_ob, _ = stats.by_kind.get("reduce-scatter", (0, 0, 0))
         _, ag_ob, _ = stats.by_kind.get("all-gather", (0, 0, 0))
         derived = (K - 1) * rs_ob + K * (K - 1) * ag_ob
     else:
         derived = 2 * K * (stats.total_operand_bytes - 4)
     wire_dtypes = {dt for dt in ("s8", "u8")
-                   if re.search(dt + r"\[[0-9,]+\]\S* all-gather", txt)}
+                   if re.search(dt + r"\[[0-9,]+\]\S* "
+                                r"(all-gather|collective-permute)", txt)}
     return derived, wire_dtypes
 
 
@@ -318,8 +350,8 @@ def run(ctx: BenchContext) -> dict:
                              f"eps={eps}; {modelled} modelled bytes/round"
                              + (f" == {derived} from HLO"
                                 if derived is not None else ""))
-    # --- regime cells: straggler / bounded-staleness / elastic ---------
-    for algo, spec in REGIME_CELLS:
+    # --- regime cells: straggler / staleness / elastic / backend -------
+    for algo, spec in REGIME_CELLS + BACKEND_CELLS:
         ex = ExchangeConfig.parse(spec)
         cell_key = re.sub(r"[^a-z0-9]+", "_", spec.lower()).strip("_")
         eps = _eps(algo, ex.scheme.name, wl)
@@ -336,6 +368,17 @@ def run(ctx: BenchContext) -> dict:
                 f"{spec}: straggler profile changed the trajectory "
                 f"({r_v} rounds/subopt {s_v:.2e} vs base {r_b}/{s_b:.2e})"
                 " — stragglers must be time-only")
+        if (ex.backend != "xla" and ex.scheme.name == "persistent"
+                and not ex.mode.stale and not ex.straggler.active
+                and ex.membership.empty):
+            # the virtual driver sums stacked per-worker updates with no
+            # collectives at all — a backend segment may never change it
+            r_b, s_b = base_traj[algo]
+            assert r_v == r_b and s_v == s_b, (
+                f"{spec}: collective backend changed the VIRTUAL "
+                f"trajectory ({r_v} rounds/subopt {s_v:.2e} vs base "
+                f"{r_b}/{s_b:.2e}) — the vmap driver is backend-"
+                f"oblivious by construction")
         # membership events name absolute worker indices; a
         # device-starved mesh (K_sh < wl.K) cannot host them
         run_sh = ex.membership.empty or K_sh == wl.K
@@ -416,7 +459,8 @@ def run(ctx: BenchContext) -> dict:
                        "algorithms": list(ALGORITHMS),
                        "schemes": list(SCHEMES),
                        "modes": list(MODES),
-                       "regime_cells": [list(c) for c in REGIME_CELLS]},
+                       "regime_cells": [list(c) for c in REGIME_CELLS],
+                       "backend_cells": [list(c) for c in BACKEND_CELLS]},
             "timings_s": timings, "counters": counters,
             "rows": rows, "notes": notes}
 

@@ -114,4 +114,23 @@ print(f"cocoa elastic drop:3@2-4: rounds->1e-2 = {h.rounds_to(1e-2)}, "
       f"bytes full = {el.comm_bytes_per_round()}, "
       f"at t=2 (7/8 live) = {el.comm_bytes_per_round(t=2)}")
 print("=> one grammar for the whole exchange: "
-      "transport:codec / stale:k / straggler:kind(...) / drop:w@d-r")
+      "transport:codec / backend / stale:k / straggler:kind(...) / "
+      "drop:w@d-r")
+
+# 8. the collective-backend axis: the SAME exchange on a different
+#    fabric. `ring` runs the reduce-scatter + all-gather explicitly via
+#    lax.ppermute (codec-encoded parts for `compressed`), so it prices
+#    what the fused collective hides: the link latency is paid per HOP
+#    (2(K-1) charges for the sum transports) — the term that shifts the
+#    tuned H *up* on latency-bound links. Numerics are pinned: the
+#    compressed/spark_faithful rings are bit-identical to xla, the
+#    in-place sums agree to float tolerance. launch/dist.py runs the
+#    same specs across real processes (jax.distributed + gloo).
+for spec in ("persistent", "persistent/ring", "compressed:int4/ring"):
+    tr = CoCoATrainer(CoCoAConfig(K=8, H=128, exchange=spec), A, b)
+    tm = TimeModel(PROFILES["E_mpi"], tr.comm_bytes_per_round(), link,
+                   exchange=tr.exchange, workers=8)
+    print(f"cocoa {spec:20s}: bytes/round = {tr.comm_bytes_per_round():6d}, "
+          f"comm = {tm.comm_time_s() * 1e3:6.2f} ms")
+print("=> same update, different fabric: the backend segment swaps the "
+      "collective implementation without touching the algorithm.")

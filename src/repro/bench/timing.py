@@ -78,10 +78,18 @@ def measure_solver_time(trainer, H: int, reps: int = 3,
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class LinkCalibration:
-    """A fitted ``t(nbytes) = latency_s + nbytes / bandwidth_Bps`` model
-    of one communication scheme's collective on one mesh."""
+    """A fitted ``t(nbytes) = hops * latency_s + nbytes /
+    bandwidth_Bps`` model of one exchange's collective on one mesh.
+
+    ``latency_s`` is the fixed cost of ONE sequential collective
+    dispatch (one hop): a fused ``xla`` collective pays it once per
+    exchange, an explicit ``ring`` pays it per ``ppermute`` hop on the
+    critical path — the backend's ``latency_hops`` supplies the
+    multiplier (``TimeModel`` threads it through), which is what makes
+    a latency-bound ring favour fewer, larger exchanges in
+    ``autotune_H``."""
     bandwidth_Bps: float        # bytes per second on the wire
-    latency_s: float = 0.0      # fixed per-round cost (dispatch, sync)
+    latency_s: float = 0.0      # fixed per-hop cost (dispatch, sync)
     source: str = "measured"    # measured | synthetic
 
     def __post_init__(self):
@@ -91,13 +99,15 @@ class LinkCalibration:
         if self.latency_s < 0:
             raise ValueError(f"latency must be >= 0, got {self.latency_s!r}")
 
-    def seconds_for(self, nbytes: float, overlap_s: float = 0.0) -> float:
-        """Wall seconds the transfer costs the round. ``overlap_s`` is
+    def seconds_for(self, nbytes: float, overlap_s: float = 0.0,
+                    latency_hops: int = 1) -> float:
+        """Wall seconds the transfer costs the round, paying
+        ``latency_hops`` sequential per-hop latencies. ``overlap_s`` is
         compute time the exchange may hide behind (the ``stale``
         exchange mode's one-round-delayed apply): the hidden portion is
         ``min(t_wire, overlap_s)``, so a fully-hidden transfer costs 0
         and a partially-hidden one costs only the overhang."""
-        t = self.latency_s + nbytes / self.bandwidth_Bps
+        t = latency_hops * self.latency_s + nbytes / self.bandwidth_Bps
         return t - min(t, max(overlap_s, 0.0))
 
     def scaled(self, bandwidth_mult: float) -> "LinkCalibration":
@@ -119,25 +129,43 @@ def synthetic_link(bandwidth_Bps: float,
 CALIBRATION_LENGTHS = (1 << 10, 1 << 14, 1 << 17)
 
 
-def calibrate_link(scheme_name: str = "persistent", mesh=None,
+def calibrate_link(exchange=None, mesh=None,
                    lengths: tuple = CALIBRATION_LENGTHS,
                    policy: TimingPolicy = TimingPolicy(warmup=2, reps=5),
                    fake_bandwidth_Bps: float | None = None,
-                   fake_latency_s: float = 0.0) -> LinkCalibration:
-    """Measure (bandwidth, latency) of ``scheme_name``'s actual
+                   fake_latency_s: float = 0.0,
+                   scheme_name: str | None = None) -> LinkCalibration:
+    """Measure (bandwidth, per-hop latency) of an exchange's actual
     collective on the current mesh.
+
+    ``exchange`` is an :class:`~repro.core.distributed.ExchangeConfig`
+    or spec string (``"compressed:int4/ring"``) — the scheme picks the
+    collective + byte accounting and the backend segment picks the
+    fabric it runs on (default ``"persistent"`` on ``xla``). The
+    deprecated ``scheme_name=`` keyword folds through
+    ``resolve_exchange`` with a ``ReproDeprecationWarning``; passing
+    both is a hard error. (A bare scheme string as the first positional
+    is still fine — every scheme name is a valid exchange spec.)
 
     Ping-pong: for each payload length the scheme's ``all_reduce`` is
     jitted under ``shard_map`` on ``mesh`` (default: a 1-D ``workers``
     mesh over every visible device) and timed under ``policy``; the
     scheme's own ``bytes_per_round`` provides the x-axis and a
     least-squares line through (bytes, seconds) yields
-    ``1/bandwidth`` (slope) and ``latency`` (intercept).
+    ``1/bandwidth`` (slope) and the latency intercept. The intercept is
+    divided by the backend's ``latency_hops`` so ``latency_s`` is
+    PER-HOP — ``TimeModel`` multiplies it back by the hop count, so a
+    ring fit and an xla fit are charged on the same footing.
 
     ``fake_bandwidth_Bps`` bypasses measurement entirely and returns a
     deterministic :func:`synthetic_link` — the path tests and
     single-device hosts use.
     """
+    from repro.core.distributed import resolve_exchange
+    from repro.comm.collectives import get_backend
+
+    ex = resolve_exchange(exchange, comm_scheme=scheme_name,
+                          owner="calibrate_link")
     if fake_bandwidth_Bps is not None:
         return synthetic_link(fake_bandwidth_Bps, fake_latency_s)
 
@@ -146,10 +174,9 @@ def calibrate_link(scheme_name: str = "persistent", mesh=None,
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.distributed import CommScheme
     from repro.utils import compat
 
-    scheme = CommScheme.parse(scheme_name)
+    scheme, backend = ex.scheme, ex.backend
     if mesh is None:
         mesh = compat.make_mesh((len(jax.devices()),), ("workers",))
     axis = mesh.axis_names[0]
@@ -158,18 +185,19 @@ def calibrate_link(scheme_name: str = "persistent", mesh=None,
     xs, ys = [], []
     for L in lengths:
         fn = jax.jit(compat.shard_map(
-            lambda u: scheme.all_reduce(u[0], axis)[None],
+            lambda u: scheme.all_reduce(u[0], axis, backend=backend)[None],
             mesh, in_specs=P(axis), out_specs=P(axis)))
         payload = jnp.ones((K, int(L)), jnp.float32)
-        xs.append(scheme.bytes_per_round(int(L), K))
+        xs.append(scheme.bytes_per_round(int(L), K, backend=backend))
         ys.append(time_callable(fn, payload, policy=policy))
+    hops = max(get_backend(backend).latency_hops(scheme.transport, K), 1)
     if K == 1 or max(xs) == min(xs):
         # a K=1 "mesh" moves zero bytes — XLA elides single-participant
         # collectives whatever the scheme's accounting says — so all
         # that is measurable is the dispatch latency; fitting a slope
         # to that noise would return a garbage "measured" bandwidth
         return LinkCalibration(bandwidth_Bps=float("inf"),
-                               latency_s=max(min(ys), 0.0),
+                               latency_s=max(min(ys), 0.0) / hops,
                                source="measured")
     slope, intercept = np.polyfit(np.asarray(xs, float),
                                   np.asarray(ys, float), 1)
@@ -178,5 +206,5 @@ def calibrate_link(scheme_name: str = "persistent", mesh=None,
     if slope <= 0:
         slope = max(ys) / max(xs)
     return LinkCalibration(bandwidth_Bps=1.0 / slope,
-                           latency_s=max(float(intercept), 0.0),
+                           latency_s=max(float(intercept), 0.0) / hops,
                            source="measured")

@@ -7,6 +7,13 @@ factors the *what travels on the wire* question out of the *which
 collective moves it* question, so a ``CommScheme`` composes as
 transport x codec (``"compressed:int4"``) instead of growing one
 special case per compression trick.
+
+``repro.comm.collectives`` answers the third question — which fabric
+*moves* the wire bytes (fused ``xla`` collectives vs an explicit
+``ppermute`` ring) — behind the pluggable ``CollectiveBackend`` axis.
 """
 from repro.comm.codec import (CODECS, F32Codec, Int4Codec,  # noqa: F401
                               Int8Codec, UpdateCodec, get_codec)
+from repro.comm.collectives import (BACKENDS, COLLECTIVE_BACKENDS,  # noqa: F401
+                                    CollectiveBackend, RingBackend,
+                                    XLABackend, get_backend, padded_len)

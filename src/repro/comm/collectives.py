@@ -1,0 +1,348 @@
+"""Pluggable collective backends: the exchange *fabric* under the
+transport x codec exchange surface.
+
+The paper's 20x->2x story comes from swapping the framework's
+communication fabric out from under an unchanged algorithm (Spark
+shuffle -> MPI allreduce); Alchemist (arXiv:1806.01270) makes exactly
+that swap a pluggable interface.  This module is that seam for our
+stack: the driver layer (``repro.core.distributed``) composes a
+transport (which exchange pattern) with a codec (what one worker's
+update looks like on the wire, ``repro.comm.codec``) — and, since this
+module, with a *backend* (which collective mechanics move the bytes):
+
+  * ``xla``   the XLA collectives (``lax.psum`` / ``all_gather`` /
+    ``psum_scatter``) — one fused collective per exchange, whatever the
+    interconnect topology.  This is the pre-backend behavior, verbatim:
+    the refactor moved the ``lax.*`` call sites here without changing a
+    single emitted op, so trajectories, HLO and byte counters are
+    bit-identical to the pre-backend layer.
+  * ``ring``  an explicit ``lax.ppermute`` ring: every exchange is
+    decomposed into K-1 neighbour-to-neighbour hops (reduce-scatter +
+    all-gather rings for the sum transports, a gather ring for the
+    collected transports).  Under a ``compressed`` transport the hops
+    move the *codec-encoded* wire tuple — quantized payloads ship
+    hop-by-hop in their wire dtype instead of dequantizing into one
+    fused all-gather — and gathers assemble parts in canonical worker
+    order, so a compressed ring decodes + sums the exact same stacked
+    array as the fused path (bit-identical aggregate; the sum
+    transports differ from ``psum`` only in float reduction order).
+
+Every backend also owns the *cost model* of its mechanics:
+
+  * :meth:`CollectiveBackend.wire_bytes` — modelled bytes on the wire
+    per round for a (transport, codec) exchange, asserted exactly equal
+    to the bytes derived from the compiled HLO by the ``drivers``
+    benchmark (collective operands for ``xla``, ``collective-permute``
+    operands x K for ``ring``).
+  * :meth:`CollectiveBackend.latency_hops` — how many sequential
+    per-hop latencies one exchange pays: 1 for a fused ``xla``
+    collective, ``2*(K-1)`` for the ring's RS+AG phases (``K-1`` for a
+    single gather ring).  ``TimeModel`` charges
+    ``hops * link.latency_s + bytes / bandwidth``, which is what shifts
+    ``autotune_H`` toward more local work on a latency-bound ring.
+
+The *virtual* (vmap) driver is backend-oblivious by construction — it
+sums stacked per-worker updates on one host with no collectives — so a
+backend changes only how the sharded/multi-process exchange moves
+bytes, never the mathematical contract between the two drivers.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm.codec import UpdateCodec
+
+FP_ITEMSIZE = 4        # every dense array in the system is float32
+
+COLLECTIVE_BACKENDS = ("xla", "ring")
+
+
+def padded_len(length: int, K: int) -> int:
+    """The K-padded vector length every reduce-scatter-style exchange
+    operates on: ``length`` rounded up to a multiple of ``K``.  The ONE
+    place the padding is computed — the collectives pad/truncate with
+    it and the byte models charge it, so the two can never recompute
+    (and disagree on) the pad amount."""
+    return -(length // -K) * K
+
+
+@runtime_checkable
+class CollectiveBackend(Protocol):
+    """One collective fabric: the primitive collectives the exchange
+    transports compose, plus the matching byte/latency cost model.
+
+    ``all_gather`` must stack per-rank values in canonical worker order
+    (slot ``j`` holds rank ``j``'s value) so transports that decode +
+    sum gathered parts are numerically backend-independent.
+    """
+
+    name: str
+
+    def all_reduce(self, x, axis: str):
+        """Sum the per-rank 1-D f32 vector across the mesh axis."""
+        ...
+
+    def all_gather(self, x, axis: str):
+        """Stack per-rank values along a new leading axis, canonical
+        worker order: result ``(K, ...)`` with slot ``j`` = rank ``j``."""
+        ...
+
+    def reduce_scatter_gather(self, x, axis: str):
+        """All-reduce decomposed as reduce-scatter + all-gather of the
+        K-padded vector (each rank owns one reduced segment in
+        between); returns the summed vector truncated to ``len(x)``."""
+        ...
+
+    def wire_bytes(self, transport: str, codec: UpdateCodec,
+                   update_len: int, K: int, *, local_state_len: int = 0,
+                   K_live: int | None = None) -> int:
+        """Modelled bytes on the wire per round for one (transport,
+        codec) exchange on this fabric (HLO-verified by the ``drivers``
+        benchmark)."""
+        ...
+
+    def latency_hops(self, transport: str, K: int) -> int:
+        """Sequential per-hop latencies one exchange pays (the
+        multiplier on ``LinkCalibration.latency_s`` in ``TimeModel``)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# xla: the fused XLA collectives (the pre-backend behavior, verbatim)
+# ---------------------------------------------------------------------------
+class XLABackend:
+    """``lax.psum`` / ``lax.all_gather`` / ``lax.psum_scatter`` — one
+    fused collective per exchange.  Bit-identical (ops, trajectories,
+    modelled bytes) to the pre-backend driver layer."""
+
+    name = "xla"
+
+    def all_reduce(self, x, axis: str):
+        return lax.psum(x, axis)
+
+    def all_gather(self, x, axis: str):
+        return lax.all_gather(x, axis)
+
+    def reduce_scatter_gather(self, x, axis: str):
+        # explicit ring decomposition: reduce-scatter the (padded)
+        # vector so each rank owns one reduced L/K segment, then
+        # all-gather the segments back. lax.psum(1, axis) folds to the
+        # static axis size, so the pad amount is concrete.
+        L = x.shape[0]
+        K = lax.psum(1, axis)
+        Lp = padded_len(L, K)
+        if Lp != L:
+            x = jnp.concatenate([x, jnp.zeros((Lp - L,), x.dtype)])
+        seg = lax.psum_scatter(x, axis, tiled=True)
+        gathered = lax.all_gather(seg, axis, tiled=True)
+        # the truncation is asserted against the SAME padded_len the
+        # byte model charges — recomputing the pad at a call site (the
+        # old drivers did) can never silently drift again
+        assert gathered.shape[0] == Lp, (gathered.shape, Lp)
+        return gathered[:L]
+
+    def wire_bytes(self, transport: str, codec: UpdateCodec,
+                   update_len: int, K: int, *, local_state_len: int = 0,
+                   K_live: int | None = None) -> int:
+        """Master-centric transports: K workers send their codec-encoded
+        update up and receive the aggregate back — ``codec.wire_bytes``
+        per worker each way; ``spark_faithful`` additionally ships the
+        ``local_state_len`` total elements of per-worker persistent
+        state up and down in f32.  ``reduce_scatter`` has no master:
+        each worker moves (K-1)/K of the K-padded update each way on
+        the ring — ``2*(K-1)*padded_len*4`` bytes in total.
+
+        ``K_live`` (elastic membership) scales the master-centric
+        volume by the live-worker count (a dropped worker ships
+        nothing); the ``reduce_scatter`` ring is membership-oblivious.
+        ``None`` means all K live — the pre-elastic formula verbatim.
+        """
+        if transport == "reduce_scatter":
+            return 2 * (K - 1) * padded_len(update_len, K) * FP_ITEMSIZE
+        persistent = transport != "spark_faithful"
+        if K_live is None:
+            return (2 * K * codec.wire_bytes(update_len)
+                    + (0 if persistent
+                       else 2 * local_state_len * FP_ITEMSIZE))
+        v = 2 * K_live * codec.wire_bytes(update_len)
+        a = (0 if persistent
+             else 2 * (local_state_len // K) * K_live * FP_ITEMSIZE)
+        return v + a
+
+    def latency_hops(self, transport: str, K: int) -> int:
+        """One fused collective = one latency, whatever the transport
+        (``spark_faithful``'s state round trip rides the same dispatch)."""
+        return 1
+
+
+# ---------------------------------------------------------------------------
+# ring: explicit lax.ppermute neighbour hops
+# ---------------------------------------------------------------------------
+def _ring_perm(K: int) -> list[tuple[int, int]]:
+    """The one-step forward rotation every ring hop uses: rank ``i``
+    sends to ``i+1 (mod K)``."""
+    return [(i, (i + 1) % K) for i in range(K)]
+
+
+class RingBackend:
+    """Explicit ``lax.ppermute`` ring collectives.
+
+    Gathers fill a canonical ``(K, ...)`` buffer — hop ``h`` delivers
+    the part originating at rank ``idx - h (mod K)`` — so transports
+    that decode + sum gathered parts (``compressed``,
+    ``spark_faithful``) produce bit-identical aggregates to the fused
+    path; the sum transports reduce in ring order and differ from
+    ``psum`` only in float rounding.  Every hop is a real
+    ``collective-permute`` in the HLO, which is how the ``drivers``
+    benchmark derives (and pins) this backend's byte model.
+    """
+
+    name = "ring"
+
+    def _gather(self, x, axis: str):
+        """Canonical-order ring all-gather: ``(K,) + x.shape``."""
+        K = lax.psum(1, axis)               # folds to the static size
+        idx = lax.axis_index(axis)
+        buf = jnp.zeros((K,) + x.shape, x.dtype)
+        buf = lax.dynamic_update_index_in_dim(buf, x, idx, 0)
+        cur = x
+        for h in range(1, K):
+            cur = lax.ppermute(cur, axis, _ring_perm(K))
+            buf = lax.dynamic_update_index_in_dim(buf, cur,
+                                                  (idx - h) % K, 0)
+        return buf
+
+    def all_gather(self, x, axis: str):
+        return self._gather(x, axis)
+
+    def all_reduce(self, x, axis: str):
+        return self.reduce_scatter_gather(x, axis)
+
+    def reduce_scatter_gather(self, x, axis: str):
+        """The classic ring all-reduce: K-1 reduce-scatter hops (each
+        rank ends owning the fully-reduced segment matching its index),
+        then K-1 all-gather hops reassembling the segments in canonical
+        order."""
+        L = x.shape[0]
+        K = lax.psum(1, axis)
+        if K == 1:
+            return x
+        Lp = padded_len(L, K)
+        if Lp != L:
+            x = jnp.concatenate([x, jnp.zeros((Lp - L,), x.dtype)])
+        segs = x.reshape(K, Lp // K)
+        idx = lax.axis_index(axis)
+        # reduce-scatter ring: rank i starts with its own contribution
+        # to segment (i-1) mod K; each hop forwards the partial sum and
+        # adds the local contribution to the segment just received —
+        # after K-1 hops rank i holds the full sum of segment i
+        acc = lax.dynamic_index_in_dim(segs, (idx - 1) % K, 0,
+                                       keepdims=False)
+        for h in range(1, K):
+            acc = lax.ppermute(acc, axis, _ring_perm(K))
+            acc = acc + lax.dynamic_index_in_dim(segs, (idx - 1 - h) % K,
+                                                 0, keepdims=False)
+        gathered = self._gather(acc, axis).reshape(Lp)
+        # same single padding contract as the xla backend: truncation
+        # is asserted against the padded_len the byte model charges
+        assert gathered.shape[0] == Lp, (gathered.shape, Lp)
+        return gathered[:L]
+
+    def wire_bytes(self, transport: str, codec: UpdateCodec,
+                   update_len: int, K: int, *, local_state_len: int = 0,
+                   K_live: int | None = None) -> int:
+        """Ring traffic: every hop, every rank forwards one part.
+
+        * sum transports (``persistent``, ``reduce_scatter``): K-1
+          reduce-scatter hops + K-1 all-gather hops of one
+          ``padded_len/K`` f32 segment per rank —
+          ``2*(K-1)*padded_len*4`` bytes in total (the same ring volume
+          the fused ``reduce_scatter`` transport moves).
+        * ``compressed``: one gather ring of the codec-encoded wire
+          tuple — K ranks x (K-1) hops x ``codec.wire_bytes`` (the
+          quantized payload AND its scale travel every hop).
+        * ``spark_faithful``: a full-vector update gather ring plus a
+          per-worker state-block gather ring —
+          ``K*(K-1)*update_len*4 + (K-1)*local_state_len*4``.
+
+        The ring is membership-oblivious (every rank relays its
+        neighbours' parts whether or not it contributed), so ``K_live``
+        is ignored — like the fused ``reduce_scatter`` transport.
+        """
+        del K_live
+        if K < 2:
+            return 0    # no hops — a 1-rank ring moves nothing
+        if transport == "compressed":
+            return K * (K - 1) * codec.wire_bytes(update_len)
+        if transport == "spark_faithful":
+            return (K * (K - 1) * update_len * FP_ITEMSIZE
+                    + (K - 1) * local_state_len * FP_ITEMSIZE)
+        return 2 * (K - 1) * padded_len(update_len, K) * FP_ITEMSIZE
+
+    def latency_hops(self, transport: str, K: int) -> int:
+        """Sequential hops on the exchange's critical path: ``K-1`` for
+        the single gather ring of ``compressed``, ``2*(K-1)`` for the
+        RS+AG sum rings and for ``spark_faithful``'s two gather rings."""
+        if K < 2:
+            return 0
+        if transport == "compressed":
+            return K - 1
+        return 2 * (K - 1)
+
+
+BACKENDS: dict[str, CollectiveBackend] = {
+    "xla": XLABackend(),
+    "ring": RingBackend(),
+}
+
+
+def get_backend(backend=None) -> CollectiveBackend:
+    """Resolve a backend name (or pass a backend object through);
+    ``None`` means the default fused ``xla`` fabric."""
+    if backend is None:
+        return BACKENDS["xla"]
+    if isinstance(backend, str):
+        try:
+            return BACKENDS[backend]
+        except KeyError:
+            raise ValueError(
+                f"unknown collective backend {backend!r}; known: "
+                f"{COLLECTIVE_BACKENDS}") from None
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# the exchange fabric: transport composition over a backend
+# ---------------------------------------------------------------------------
+def exchange_all_reduce(transport: str, codec: UpdateCodec, update,
+                        axis: str, backend=None):
+    """Sum one worker's 1-D update across the mesh axis under the
+    transport's exchange pattern, moved by ``backend``'s collectives
+    (the sharded drivers' exchange — the ONE place collective mechanics
+    meet the transport x codec surface)."""
+    be = get_backend(backend)
+    if transport == "compressed":
+        parts = codec.encode(update)            # e.g. ((L,) int8, scale)
+        gathered = tuple(be.all_gather(p, axis) for p in parts)
+        return jnp.sum(codec.decode_stacked(gathered, update.shape[0]),
+                       axis=0)
+    if transport == "spark_faithful":
+        # collected at the master and re-broadcast, not reduced
+        # in-place — identity, but the traffic is real.
+        return jnp.sum(be.all_gather(update, axis), axis=0)
+    if transport == "reduce_scatter":
+        return be.reduce_scatter_gather(update, axis)
+    return be.all_reduce(update, axis)
+
+
+def exchange_roundtrip_state(state, axis: str, backend=None):
+    """``spark_faithful``'s per-worker persistent-state round trip:
+    all-gather through the master, each worker re-slices its own block
+    — the identity, with real collective traffic on either backend."""
+    be = get_backend(backend)
+    gathered = be.all_gather(state, axis)       # (K, L_local)
+    return lax.dynamic_index_in_dim(gathered, lax.axis_index(axis), 0,
+                                    keepdims=False)

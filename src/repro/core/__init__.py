@@ -10,6 +10,7 @@ from repro.core.distributed import (COMM_SCHEMES, COMM_TRANSPORTS,  # noqa: F401
                                     CommScheme, ExchangeConfig, ExchangeMode,
                                     MembershipSchedule, StragglerProfile,
                                     get_mode, get_scheme, resolve_exchange)
-from repro.comm import CODECS, UpdateCodec, get_codec  # noqa: F401
+from repro.comm import (CODECS, COLLECTIVE_BACKENDS, CollectiveBackend,  # noqa: F401
+                        UpdateCodec, get_backend, get_codec)
 from repro.core.overheads import OverheadProfile, PROFILES  # noqa: F401
 from repro.utils.deprecation import ReproDeprecationWarning  # noqa: F401

@@ -246,7 +246,8 @@ class MinibatchSGD:
         K_live = (None if t is None
                   else self.exchange.membership.live_count(t, self.cfg.K))
         return self.scheme.bytes_per_round(self.n, self.cfg.K,
-                                           K_live=K_live)
+                                           K_live=K_live,
+                                           backend=self.exchange.backend)
 
     # ------------------------------------------------------------------
     # legacy single-device loop (global row sampling)

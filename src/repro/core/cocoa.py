@@ -235,7 +235,7 @@ class CoCoATrainer:
         return self.scheme.bytes_per_round(
             self.m, self.cfg.K,
             local_state_len=self.cfg.K * self.part.n_padded,
-            K_live=K_live)
+            K_live=K_live, backend=self.exchange.backend)
 
     # ------------------------------------------------------------------
     # the one record loop both drivers share

@@ -38,6 +38,13 @@ substrate, so this module factors it out:
     actually move (``codec.wire_bytes`` per worker each way — int8/int4
     payloads + the 4-byte scale under ``compressed``, f32 otherwise).
 
+    The collective *mechanics* under the transports live in
+    ``repro.comm.collectives`` behind the pluggable
+    :class:`~repro.comm.collectives.CollectiveBackend` axis (``xla``
+    fused collectives vs an explicit ``ring`` of ``ppermute`` hops, the
+    Alchemist-style fabric swap); :class:`ExchangeConfig` carries the
+    backend name as its own spec segment (default ``xla``).
+
   * :class:`ExchangeMode` — the *staleness* axis, orthogonal to the
     scheme (paper §4-§5: Spark's scheduling delay makes workers compute
     against stale state; treating that delay as an algorithmic knob is
@@ -118,6 +125,9 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.comm import UpdateCodec, get_codec
+from repro.comm.collectives import (FP_ITEMSIZE, COLLECTIVE_BACKENDS,
+                                    get_backend, exchange_all_reduce,
+                                    exchange_roundtrip_state)
 from repro.utils import compat
 from repro.utils.deprecation import warn_deprecated
 
@@ -129,10 +139,10 @@ COMM_SCHEMES = COMM_TRANSPORTS
 EXCHANGE_MODES = ("sync", "stale")
 STRAGGLER_KINDS = ("none", "det", "lognormal", "mix")
 
-FP_ITEMSIZE = 4        # every dense array in the system is float32
-
 # the one-line grammar every exchange-spec parse error points at
-EXCHANGE_GRAMMAR = ("<transport>[:<codec>] | sync | stale[:k=<int>] | "
+EXCHANGE_GRAMMAR = ("<transport>[:<codec>] | "
+                    + " | ".join(COLLECTIVE_BACKENDS)
+                    + " | sync | stale[:k=<int>] | "
                     "straggler:<kind>[(p=..,slow=..,sigma=..)] | "
                     "drop:<worker>@<round>[-<round>]")
 
@@ -212,32 +222,13 @@ class CommScheme:
         return self.transport != "spark_faithful"
 
     # -- aggregation inside shard_map (per-shard view) ---------------------
-    def all_reduce(self, update: jax.Array, axis: str) -> jax.Array:
-        """Sum the per-worker 1-D update across the mesh axis."""
-        if self.transport == "compressed":
-            parts = self.codec.encode(update)       # e.g. ((L,) int8, scale)
-            gathered = tuple(lax.all_gather(p, axis) for p in parts)
-            return jnp.sum(
-                self.codec.decode_stacked(gathered, update.shape[0]),
-                axis=0)
-        if self.name == "spark_faithful":
-            # collected at the master and re-broadcast, not reduced
-            # in-place — identity, but the traffic is real.
-            return jnp.sum(lax.all_gather(update, axis), axis=0)
-        if self.name == "reduce_scatter":
-            # explicit ring decomposition: reduce-scatter the (padded)
-            # update so each worker owns one reduced L/K segment, then
-            # all-gather the segments back. lax.psum(1, axis) folds to
-            # the static axis size, so the pad amount is concrete.
-            L = update.shape[0]
-            K = lax.psum(1, axis)
-            pad = -L % K
-            if pad:
-                update = jnp.concatenate(
-                    [update, jnp.zeros((pad,), update.dtype)])
-            seg = lax.psum_scatter(update, axis, tiled=True)
-            return lax.all_gather(seg, axis, tiled=True)[:L]
-        return lax.psum(update, axis)
+    def all_reduce(self, update: jax.Array, axis: str,
+                   backend=None) -> jax.Array:
+        """Sum the per-worker 1-D update across the mesh axis, moved by
+        ``backend``'s collectives (name, backend object, or ``None`` for
+        the fused ``xla`` fabric — ``repro.comm.collectives``)."""
+        return exchange_all_reduce(self.transport, self.codec, update,
+                                   axis, backend)
 
     # -- aggregation over stacked (K, L) updates (virtual driver) ----------
     def all_reduce_stacked(self, updates: jax.Array) -> jax.Array:
@@ -249,57 +240,31 @@ class CommScheme:
         return jnp.sum(updates, axis=0)
 
     # -- persistent-state round trip (sharded driver only) -----------------
-    def roundtrip_local_state(self, state: jax.Array, axis: str) -> jax.Array:
+    def roundtrip_local_state(self, state: jax.Array, axis: str,
+                              backend=None) -> jax.Array:
         """``spark_faithful`` ships per-worker persistent state through
         the master every round: all-gather, then each worker re-slices
         its own block — the identity, with real collective traffic."""
         if self.persistent_local_state or state.size == 0:
             return state
-        gathered = lax.all_gather(state, axis)      # (K, L_local)
-        return lax.dynamic_index_in_dim(gathered, lax.axis_index(axis), 0,
-                                        keepdims=False)
+        return exchange_roundtrip_state(state, axis, backend)
 
     # -- modelled traffic --------------------------------------------------
     def bytes_per_round(self, update_len: int, K: int,
                         local_state_len: int = 0,
-                        K_live: int | None = None) -> int:
+                        K_live: int | None = None,
+                        backend=None) -> int:
         """Bytes on the wire per round (paper Fig 1 + §5.3), sized to
-        the dtypes the collectives actually move.
-
-        Master-centric schemes: K workers send their codec-encoded
-        ``update_len``-vector up and receive the aggregate back —
-        ``codec.wire_bytes`` per worker each way (f32 4B/element for
-        the exact transports; int8 1B/element or int4 packed
-        ceil(len/2) bytes, + the 4-byte f32 scale, under
-        ``compressed``). ``spark_faithful`` additionally ships the
-        ``local_state_len`` total elements of per-worker persistent
-        state up and down in f32. ``reduce_scatter`` has no master:
-        each worker moves (K-1)/K of the (K-padded) update each way on
-        the ring — ``2*(K-1)*len_pad*4`` bytes in total.
-
-        ``K_live`` (elastic membership) is the number of live workers
-        this round: a dropped worker ships nothing to the master and
-        receives nothing back, so the master-centric volume scales by
-        ``K_live / K`` exactly (the per-worker state term likewise
-        moves only live workers' blocks). The ring is membership-
-        oblivious — every rank still relays its neighbours' segments —
-        so ``reduce_scatter`` traffic is unchanged. ``None`` (the
-        default) means all K live, reproducing the pre-elastic formula
-        bit for bit.
-        """
-        if self.transport == "reduce_scatter":
-            len_pad = -(update_len // -K) * K
-            return 2 * (K - 1) * len_pad * FP_ITEMSIZE
-        if K_live is None:
-            # the pre-elastic formula, verbatim (local_state_len is the
-            # TOTAL element count across workers)
-            return (2 * K * self.codec.wire_bytes(update_len)
-                    + (0 if self.persistent_local_state
-                       else 2 * local_state_len * FP_ITEMSIZE))
-        v = 2 * K_live * self.codec.wire_bytes(update_len)
-        a = (0 if self.persistent_local_state
-             else 2 * (local_state_len // K) * K_live * FP_ITEMSIZE)
-        return v + a
+        the dtypes the collectives actually move — the backend owns the
+        formula (:meth:`~repro.comm.collectives.CollectiveBackend.
+        wire_bytes`), since the same transport moves different volumes
+        on a fused collective vs an explicit ring.  ``K_live`` (elastic
+        membership) is the number of live workers this round; ``None``
+        (the default) means all K live, reproducing the pre-elastic
+        formula bit for bit."""
+        return get_backend(backend).wire_bytes(
+            self.transport, self.codec, update_len, K,
+            local_state_len=local_state_len, K_live=K_live)
 
 
 def get_scheme(name: str) -> CommScheme:
@@ -617,14 +582,16 @@ class MembershipSchedule:
 @dataclass(frozen=True)
 class ExchangeConfig:
     """Everything about how one run exchanges updates, in one frozen
-    value: the comm scheme (transport x codec), the exchange mode
-    (sync / bounded staleness), the straggler profile, and the elastic
-    membership schedule.
+    value: the comm scheme (transport x codec), the collective backend
+    (which fabric moves the bytes — ``repro.comm.collectives``), the
+    exchange mode (sync / bounded staleness), the straggler profile,
+    and the elastic membership schedule.
 
     Round-trips to/from a ``"/"``-separated spec string whose segments
     may appear in any order::
 
         ExchangeConfig.parse("compressed:int4/stale:k=2")
+        ExchangeConfig.parse("compressed:int4/ring/stale:k=2")
         ExchangeConfig.parse("persistent/straggler:mix(p=0.1,slow=8)")
         ExchangeConfig.parse("spark_faithful/drop:1@5-9/drop:3@7")
 
@@ -639,6 +606,7 @@ class ExchangeConfig:
     mode: ExchangeMode = field(default_factory=lambda: ExchangeMode("sync"))
     straggler: StragglerProfile = field(default_factory=StragglerProfile)
     membership: MembershipSchedule = field(default_factory=MembershipSchedule)
+    backend: str = "xla"
 
     def __post_init__(self):
         # constructor convenience: each component may be given as its
@@ -656,6 +624,10 @@ class ExchangeConfig:
                 MembershipSchedule.parse(self.membership)
                 if isinstance(self.membership, str)
                 else MembershipSchedule(self.membership))
+        # the backend is stored by name (a backend object is folded to
+        # its name so the config stays a frozen hashable value);
+        # get_backend raises on unknown names
+        object.__setattr__(self, "backend", get_backend(self.backend).name)
 
     @classmethod
     def parse(cls, spec: "ExchangeConfig | CommScheme | ExchangeMode | str",
@@ -670,11 +642,20 @@ class ExchangeConfig:
             return cls(scheme=spec)
         if isinstance(spec, ExchangeMode):
             return cls(mode=spec)
-        scheme = mode = straggler = None
+        scheme = mode = straggler = backend = None
         events: list = []
         for seg in str(spec).split("/"):
             head = seg.partition(":")[0]
-            if head in COMM_TRANSPORTS:
+            if head in COLLECTIVE_BACKENDS:
+                if seg != head:
+                    raise ValueError(
+                        f"exchange spec {spec!r}: collective-backend "
+                        f"segment {seg!r} takes no parameters")
+                if backend is not None:
+                    raise ValueError(f"exchange spec {spec!r}: duplicate "
+                                     f"collective-backend segment {seg!r}")
+                backend = head
+            elif head in COMM_TRANSPORTS:
                 if scheme is not None:
                     raise ValueError(f"exchange spec {spec!r}: duplicate "
                                      f"comm-scheme segment {seg!r}")
@@ -700,13 +681,17 @@ class ExchangeConfig:
                    mode=mode if mode is not None else ExchangeMode("sync"),
                    straggler=straggler if straggler is not None
                    else StragglerProfile(),
-                   membership=MembershipSchedule(tuple(events)))
+                   membership=MembershipSchedule(tuple(events)),
+                   backend=backend if backend is not None else "xla")
 
     @property
     def spec(self) -> str:
-        """Canonical spec string: scheme first, then every non-default
-        segment; ``parse(spec)`` round-trips."""
+        """Canonical spec string: scheme first, then the backend when
+        not the default ``xla``, then every other non-default segment;
+        ``parse(spec)`` round-trips."""
         segs = [self.scheme.name]
+        if self.backend != "xla":
+            segs.append(self.backend)
         if self.mode.spec != "sync":
             segs.append(self.mode.spec)
         if self.straggler.active:
@@ -1069,7 +1054,7 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
             mask_k = mask[lax.axis_index(axis)]
             upd = upd * mask_k
             local_new = _freeze_dropped(local_new, local_k, mask_k)
-        total = comm.all_reduce(upd, axis)
+        total = comm.all_reduce(upd, axis, backend=ex.backend)
         if reweight:
             total = total * (K / jnp.maximum(jnp.sum(mask), 1.0))
         if xmode.stale:
@@ -1080,7 +1065,8 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
             shared_new = algo.apply_update(shared, total, t)
             shared_out = shared_new
             metric_shared = shared_new
-        local_new = comm.roundtrip_local_state(local_new, axis)
+        local_new = comm.roundtrip_local_state(local_new, axis,
+                                               backend=ex.backend)
         # stale pairs the lagged shared state with the round-t-1 local
         # state so the metric is a real iterate's objective (see the
         # virtual driver) — and matches it round for round
@@ -1100,6 +1086,14 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
     def jitted(keys, local, shared, t):
         return sharded(data, local, keys, shared, t)
 
+    @functools.partial(jax.jit, donate_argnums=(2, 3) if donate else ())
+    def jitted_data(data_arg, keys, local, shared, t):
+        # data as an explicit argument instead of a closure constant:
+        # multi-process runs (launch.dist) place the data as GLOBAL
+        # arrays, and jit forbids closing over arrays that span
+        # non-addressable devices — traced only if actually used
+        return sharded(data_arg, local, keys, shared, t)
+
     def split_keys(key):
         # same per-worker key derivation as the virtual driver, so the
         # two paths follow the same trajectory; computed OUTSIDE the
@@ -1114,6 +1108,7 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
     # the jitted inner + key derivation, exposed for AOT lowering (HLO
     # collective-traffic inspection in benches/tests) and state placement
     round_fn.jitted = jitted
+    round_fn.jitted_data = jitted_data
     round_fn.split_keys = split_keys
     round_fn.mesh = mesh
     round_fn.exchange = ex

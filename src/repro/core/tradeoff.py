@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.bench.timing import (LinkCalibration, calibrate_link,  # noqa: F401
                                 measure_solver_time, synthetic_link)
+from repro.comm.collectives import get_backend
 from repro.core.baselines import MinibatchSCD, MinibatchSGD, SGDConfig
 from repro.core.cocoa import CoCoAConfig, CoCoATrainer
 from repro.core.distributed import ExchangeConfig, ExchangeMode
@@ -154,6 +155,11 @@ class TimeModel:
             raise ValueError(
                 "TimeModel with a straggler profile needs workers=K — "
                 "the barrier charges E[max over K workers]")
+        if ex.backend != "xla" and self.workers < 1:
+            raise ValueError(
+                f"TimeModel with the {ex.backend!r} collective backend "
+                f"needs workers=K — the hop latency scales with the "
+                f"ring size")
 
     @property
     def name(self) -> str:
@@ -174,9 +180,15 @@ class TimeModel:
         the collective ``k`` rounds to finish)."""
         if self.link is None or self.comm_bytes_per_round <= 0:
             return 0.0
-        m = self.exchange.mode
-        overlap = m.k * t_compute_s if m.stale else 0.0
-        return self.link.seconds_for(self.comm_bytes_per_round, overlap)
+        ex = self.exchange
+        overlap = ex.mode.k * t_compute_s if ex.mode.stale else 0.0
+        # the backend owns how many sequential per-hop latencies one
+        # exchange pays: 1 for a fused xla collective, up to 2*(K-1)
+        # for the explicit ring — the term that shifts autotune_H
+        hops = get_backend(ex.backend).latency_hops(
+            ex.scheme.transport, self.workers or 1)
+        return self.link.seconds_for(self.comm_bytes_per_round, overlap,
+                                     latency_hops=max(hops, 1))
 
     def round_time(self, t_solver_s: float, t_ref_s: float,
                    t_master_s: float = 0.0) -> float:

@@ -46,8 +46,10 @@ def main() -> None:
                     help="local steps per sync (paper's knob); 0=auto")
     ap.add_argument("--exchange", default=None, metavar="SPEC",
                     help="driver-layer exchange spec (e.g. "
-                         "'compressed:int8'); its wire codec drives the "
-                         "delta exchange")
+                         "'compressed:int8' or 'compressed:int4/ring'); "
+                         "its wire codec drives the delta exchange (the "
+                         "backend segment matters on the sharded "
+                         "driver / launch.dist)")
     ap.add_argument("--codec", choices=("f32", "int8", "int4"),
                     default=None,
                     help="DEPRECATED: wire codec alone — use "

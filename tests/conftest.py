@@ -20,6 +20,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 TEST_TIERS = {
     # nodeid substring -> tier
     "test_distributed.py::test_dryrun_production_mesh_smoke": "slow",
+    "test_collectives.py::test_ring_sharded_trainer_matches_virtual": "slow",
+    "test_dist_launch.py::test_two_process_matches_single": "slow",
 }
 
 _KNOWN_TIERS = ("slow",)

@@ -185,10 +185,11 @@ def test_smoke_tier_end_to_end(tmp_path):
     # drivers x every transport-x-codec scheme x both exchange modes
     # (72 rows — the 36 modelled-bytes cells each run on both drivers)
     # ... plus the regime cells (full ExchangeConfig specs: straggler,
-    # bounded staleness, elastic membership), whose sharded leg is
-    # skipped on a device-starved mesh (membership events name absolute
-    # worker indices the smaller mesh cannot host)
-    from benchmarks.bench_drivers import REGIME_CELLS
+    # bounded staleness, elastic membership) and the collective-backend
+    # cells (ring fabric); a regime cell's sharded leg is skipped on a
+    # device-starved mesh (membership events name absolute worker
+    # indices the smaller mesh cannot host)
+    from benchmarks.bench_drivers import BACKEND_CELLS, REGIME_CELLS
     from repro.core import ExchangeConfig
 
     got = {(r["algorithm"], r["driver"], r["scheme"], r["mode"])
@@ -202,7 +203,7 @@ def test_smoke_tier_end_to_end(tmp_path):
                           "compressed:f32", "compressed:int8",
                           "compressed:int4", "reduce_scatter")
                 for m in ("sync", "stale")}
-    for algo, spec in REGIME_CELLS:
+    for algo, spec in REGIME_CELLS + BACKEND_CELLS:
         ex = ExchangeConfig.parse(spec)
         drivers = (("virtual", "sharded")
                    if ex.membership.empty or k_sh == k_virt
@@ -214,11 +215,12 @@ def test_smoke_tier_end_to_end(tmp_path):
             if r["scheme"].startswith("compressed")} == {"f32", "int8",
                                                          "int4"}
     # every cell reports modelled bytes sized to the scheme's dtypes —
-    # except reduce_scatter on a single-device mesh, whose ring volume
-    # 2*(K-1)/K*len is genuinely zero at K=1
+    # except reduce_scatter and the ring backend on a single-device
+    # mesh, whose ring volumes are genuinely zero at K=1
     k_sh = by["drivers"].params["K_sharded"]
     for r in by["drivers"].rows:
-        if r["scheme"] == "reduce_scatter" and k_sh == 1:
+        if k_sh == 1 and (r["scheme"] == "reduce_scatter"
+                          or "/ring" in r["scheme"]):
             assert r["comm_bytes_per_round"] == 0
         else:
             assert r["comm_bytes_per_round"] > 0

@@ -37,6 +37,9 @@ ROUNDTRIP_SPECS = (
     "persistent/drop:1@5",
     "compressed:int8/stale:k=3/straggler:mix(p=0.1,slow=8)/drop:1@5-9",
     "persistent/drop:1@5-9/drop:3@7",
+    "persistent/ring",
+    "compressed:int4/ring/stale:k=2",
+    "spark_faithful/ring/straggler:det(slow=4)/drop:1@5",
 )
 
 
@@ -54,6 +57,11 @@ def test_exchange_spec_segments_are_order_independent():
     assert a == b
     # ... and the canonical spelling always leads with the scheme
     assert b.spec == "compressed:int4/stale:k=2/drop:1@5"
+    # the collective-backend segment is order-independent like the rest,
+    # and canonically sits right after the scheme
+    c = ExchangeConfig.parse("stale:k=2/ring/compressed:int4")
+    assert c == ExchangeConfig.parse("compressed:int4/ring/stale:k=2")
+    assert c.spec == "compressed:int4/ring/stale:k=2"
 
 
 def test_exchange_spec_defaults_elided():
@@ -61,6 +69,11 @@ def test_exchange_spec_defaults_elided():
     assert ExchangeConfig().spec == "persistent"
     ex = ExchangeConfig.parse("stale:k=2")
     assert ex.scheme.name == "persistent" and ex.mode.k == 2
+    # the default xla backend is elided from the canonical spelling
+    assert ExchangeConfig.parse("persistent/xla").spec == "persistent"
+    assert ExchangeConfig(backend="xla").spec == "persistent"
+    assert ExchangeConfig.parse("ring").spec == "persistent/ring"
+    assert ExchangeConfig(backend="ring").backend == "ring"
 
 
 def test_exchange_parse_passes_through_typed_values():
@@ -107,6 +120,17 @@ def test_exchange_spec_typed_errors():
         MembershipSchedule.parse("drop:1@")
     with pytest.raises(ValueError, match="last >= first"):
         MembershipSchedule.parse("drop:1@9-5")
+    # collective-backend segment errors spell out the grammar
+    with pytest.raises(ValueError, match="the grammar is"):
+        ExchangeConfig.parse("persistent/nccl")
+    with pytest.raises(ValueError, match="takes no parameters"):
+        ExchangeConfig.parse("persistent/ring:fast")
+    with pytest.raises(ValueError, match="duplicate collective-backend"):
+        ExchangeConfig.parse("persistent/ring/xla")
+    with pytest.raises(ValueError, match="duplicate collective-backend"):
+        ExchangeConfig.parse("ring/persistent/ring")
+    with pytest.raises(ValueError, match="unknown collective backend"):
+        ExchangeConfig(backend="nccl")
 
 
 # ------------------------------------------------- deprecated spellings

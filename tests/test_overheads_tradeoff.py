@@ -251,6 +251,73 @@ def test_calibrate_link_fake_bandwidth_deterministic():
         synthetic_link(0.0)
 
 
+def test_calibrate_link_exchange_front_door_and_deprecated_scheme_name():
+    """calibrate_link takes the unified exchange spec (backend segment
+    included); the old ``scheme_name=`` keyword still works under one
+    ReproDeprecationWarning, and disagreeing spellings are a hard
+    error, not a silent preference."""
+    from repro.utils.deprecation import ReproDeprecationWarning
+
+    b = calibrate_link("persistent", fake_bandwidth_Bps=2e9,
+                       fake_latency_s=1e-4)
+    # non-default legacy value -> one warning (the default stays silent,
+    # matching resolve_exchange everywhere else)
+    with pytest.warns(ReproDeprecationWarning, match="comm_scheme"):
+        a = calibrate_link(scheme_name="spark_faithful",
+                           fake_bandwidth_Bps=2e9, fake_latency_s=1e-4)
+    assert a == b   # synthetic path: same calibration either way
+    # full specs parse through the front door (synthetic path ignores
+    # the exchange, so the calibration is identical)
+    assert calibrate_link("compressed:int4/ring", fake_bandwidth_Bps=2e9,
+                          fake_latency_s=1e-4) == b
+    with pytest.raises(ValueError, match="conflicts with deprecated"):
+        calibrate_link("compressed:int4", scheme_name="persistent",
+                       fake_bandwidth_Bps=2e9)
+
+
+def test_time_model_ring_hop_latency():
+    """The ring backend pays the link latency per HOP: 2(K-1) for the
+    reduce-scatter+gather transports, K-1 for the gather-only
+    (compressed) ones, against the fused fabric's single charge."""
+    link = synthetic_link(1e9, latency_s=1e-3)
+    E = PROFILES["E_mpi"]
+    K, nbytes = 5, 10 ** 6      # 1 ms on the wire
+    xla = TimeModel(E, nbytes, link, exchange="persistent", workers=K)
+    ring = TimeModel(E, nbytes, link, exchange="persistent/ring",
+                     workers=K)
+    assert xla.comm_time_s() == pytest.approx(1e-3 + 1e-3)
+    assert ring.comm_time_s() == pytest.approx(1e-3 + 2 * (K - 1) * 1e-3)
+    gathered = TimeModel(E, nbytes, link,
+                         exchange="compressed:int4/ring", workers=K)
+    assert gathered.comm_time_s() == pytest.approx(
+        1e-3 + (K - 1) * 1e-3)
+    # hop count needs the ring size
+    with pytest.raises(ValueError, match="needs workers=K"):
+        TimeModel(E, nbytes, link, exchange="persistent/ring")
+
+
+def test_ring_backend_shifts_optimal_H_up_on_latency_bound_link():
+    """On a latency-dominated link the ring's 2(K-1) hop charges raise
+    the per-round constant, so the optimum moves to BIGGER rounds —
+    the same amortization trade the paper pins on framework overhead,
+    now driven by the collective fabric."""
+    link = synthetic_link(1e9, latency_s=0.2)
+    E = PROFILES["E_mpi"]
+    sweep = _toy_sweep()
+    sweep.comm_bytes_per_round = 1 << 10    # tiny payload, pure latency
+    h_xla, t_xla = optimal_H(
+        TimeModel(E, link=link, workers=8).for_sweep(sweep), sweep)
+    ring_sweep = HSweep(eps=sweep.eps, n_local=sweep.n_local,
+                        t_ref_s=sweep.t_ref_s, points=sweep.points,
+                        exchange="persistent/ring",
+                        comm_bytes_per_round=sweep.comm_bytes_per_round)
+    h_ring, t_ring = optimal_H(
+        TimeModel(E, link=link, workers=8).for_sweep(ring_sweep),
+        ring_sweep)
+    assert h_ring > h_xla, (h_ring, h_xla)
+    assert t_ring > t_xla   # the hops are a real cost, not a reshuffle
+
+
 def _toy_sweep():
     """rounds_to_eps ~ c/H convergence; t_solver ~ linear in H."""
     sweep = HSweep(eps=1e-3, n_local=1024, t_ref_s=1.0)
