@@ -53,56 +53,16 @@ import re
 import time
 
 from benchmarks import common
+# the cell matrix and byte derivation are owned by repro.analysis —
+# the bench re-asserts what `python -m repro.analysis` lints, on the
+# SAME cells and through the SAME graph API (no local HLO walking)
+from repro.analysis.cells import (ALGORITHMS, BACKEND_CELLS,
+                                  CODEC_WIRE_DTYPE, MODES, REGIME_CELLS,
+                                  SCHEMES)
 from repro.bench.registry import BenchContext, benchmark
 from repro.bench.timing import time_callable
-from repro.core.distributed import (EXCHANGE_MODES, CommScheme,
-                                    ExchangeConfig)
+from repro.core.distributed import CommScheme, ExchangeConfig
 from repro.core.glm import suboptimality
-
-# every transport x codec cell: the exact transports compose only with
-# the f32 identity (validated by CommScheme), `compressed` with all
-# three codecs — bare "compressed" (the :int8 alias) is covered by the
-# codec-regression test in tests/test_distributed.py, not re-run here
-SCHEMES = ("persistent", "spark_faithful", "compressed:f32",
-           "compressed:int8", "compressed:int4", "reduce_scatter")
-MODES = EXCHANGE_MODES
-ALGORITHMS = ("cocoa", "minibatch_scd", "minibatch_sgd")
-
-# Regime cells (full ExchangeConfig specs) on top of the transport x
-# codec x mode matrix: straggler jitter (must be time-only — the BSP
-# barrier makes straggling a wall-clock effect, so the trajectory is
-# asserted bit-identical to the base cell), bounded staleness k=2 (the
-# delayed apply two rounds deep), and elastic membership (worker 1 drops
-# at round 2, rejoins after round 4; live-round traffic shrinks with the
-# live-worker count while the full-membership HLO bytes are unchanged —
-# masking happens before the collective, never inside it).
-REGIME_CELLS = (
-    ("cocoa", "persistent/straggler:mix(p=0.25,slow=8)"),
-    ("cocoa", "persistent/stale:k=2"),
-    ("cocoa", "persistent/drop:1@2-4"),
-    ("minibatch_sgd", "compressed:int8/drop:1@2-4"),
-)
-
-# Collective-backend cells: every transport on the explicit ppermute
-# ring (repro.comm.collectives), one per transport plus a stale ring
-# (ring bytes must be mode-independent like every other transport's).
-# The byte derivation flips: a ring round's traffic is K x the
-# collective-permute operand bytes in the HLO (each unrolled hop is one
-# ppermute op moved by all K ranks), and under `compressed` the
-# quantized wire dtypes must show up in the ppermute ops — the codec
-# payload ships through every hop. The virtual driver is
-# backend-oblivious (no collectives to swap), so `persistent/ring` is
-# asserted trajectory-identical to the `persistent` base cell there.
-# No ring x membership cell: the ring is membership-oblivious (every
-# rank relays its neighbours' parts), so the K_live byte scaling the
-# membership cells assert simply does not apply to it.
-BACKEND_CELLS = (
-    ("cocoa", "persistent/ring"),
-    ("cocoa", "compressed:int4/ring"),
-    ("minibatch_scd", "reduce_scatter/ring"),
-    ("minibatch_sgd", "spark_faithful/ring"),
-    ("cocoa", "persistent/ring/stale:k=2"),
-)
 
 # Fixed-seed rounds-to-eps bands per algorithm (smoke tier: m=96, n=256,
 # K=4, seed 42 data / seed 0 trainer). Measured centers ~15 / ~32 / ~93;
@@ -135,10 +95,6 @@ CODEC_EPS_MULT = {
     "int8": {"cocoa": 1, "minibatch_scd": 4, "minibatch_sgd": 1},
     "int4": {"cocoa": 128, "minibatch_scd": 192, "minibatch_sgd": 16},
 }
-
-# the wire dtype the codec's payload all-gather must show in the HLO
-CODEC_WIRE_DTYPE = {"f32": None, "int8": "s8", "int4": "u8"}
-
 
 def _eps(algo: str, scheme: str, wl) -> float:
     # the sqrt-decay SGD schedule cannot hit 1e-3 in smoke budgets;
@@ -226,42 +182,18 @@ def _run_sharded(tr, wl, eps, round_fn):
 
 def _hlo_traffic(tr, round_fn):
     """(derived bytes/round, quantized wire dtypes present) from the
-    optimized HLO of the sharded round.
+    optimized HLO of the sharded round — via the repro.analysis graph
+    API, the single owner of the byte derivation (master-centric
+    2 x K x operand, reduce-scatter ring volume, ring K x ppermute; see
+    repro.analysis.traffic.derived_round_traffic)."""
+    from repro.analysis.cells import lower_round_hlo
+    from repro.analysis.graph import lift_hlo
+    from repro.analysis.traffic import (derived_round_traffic,
+                                        quantized_wire_dtypes)
 
-    Master-centric schemes: derived = 2 x K x per-worker collective
-    operand bytes; the one scalar f32 metric psum (4 bytes) is excluded
-    — everything else is update/state traffic through the master.
-    ``reduce_scatter``: the ring volume — each worker moves (K-1)/K of
-    the reduce-scatter operand and (K-1) x its all-gather shard, so
-    derived = (K-1) x rs_operand + K x (K-1) x ag_operand (the metric
-    psum shows up as an all-reduce and is simply not counted).
-    ``wire_dtypes`` is the set of sub-f32 dtypes seen in all-gather ops
-    (s8 for the int8 codec, u8 for the packed int4 nibbles)."""
-    import jax
-
-    from repro.utils.hlo import parse_collectives
-
-    local, shared = tr.init_state()
-    txt = round_fn.jitted.lower(round_fn.split_keys(jax.random.key(0)),
-                                local, shared, 1).compile().as_text()
-    stats = parse_collectives(txt)
-    K = tr.cfg.K
-    if tr.exchange.backend == "ring":
-        # every unrolled ring hop is one collective-permute op whose
-        # operand every one of the K ranks forwards; the scalar metric
-        # psum shows as an all-reduce and is simply not counted
-        _, cp_ob, _ = stats.by_kind.get("collective-permute", (0, 0, 0))
-        derived = K * cp_ob
-    elif tr.scheme.transport == "reduce_scatter":
-        _, rs_ob, _ = stats.by_kind.get("reduce-scatter", (0, 0, 0))
-        _, ag_ob, _ = stats.by_kind.get("all-gather", (0, 0, 0))
-        derived = (K - 1) * rs_ob + K * (K - 1) * ag_ob
-    else:
-        derived = 2 * K * (stats.total_operand_bytes - 4)
-    wire_dtypes = {dt for dt in ("s8", "u8")
-                   if re.search(dt + r"\[[0-9,]+\]\S* "
-                                r"(all-gather|collective-permute)", txt)}
-    return derived, wire_dtypes
+    graph = lift_hlo(lower_round_hlo(tr, round_fn))
+    return (derived_round_traffic(graph, tr.exchange, tr.cfg.K),
+            quantized_wire_dtypes(graph))
 
 
 @benchmark("drivers", figures="§5.3-5.4",

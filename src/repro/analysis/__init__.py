@@ -1,0 +1,27 @@
+"""Static analysis of compiled exchange cells.
+
+``graph`` lifts optimized HLO into per-op collective records;
+``findings`` holds the typed rule registry; ``rules`` (cell scope) and
+``pylint_jax`` (source scope) populate it; ``traffic`` is the single
+owner of HLO-bytes derivation; ``cells`` defines the analyzable matrix;
+``run`` is the ``python -m repro.analysis`` CLI.
+
+Only the pure modules are imported eagerly: ``repro.utils.hlo``
+delegates to :mod:`repro.analysis.graph` at package-import time, so
+this ``__init__`` must not drag in jax or the rest of ``repro``
+(``rules``/``cells``/``traffic`` import lazily via ``__getattr__``).
+"""
+from repro.analysis.findings import (RULES, Finding, Rule,  # noqa: F401
+                                     register_rule)
+from repro.analysis.graph import (COLLECTIVE_OPS, CollectiveGraph,  # noqa: F401
+                                  CollectiveOp, Shape, lift_hlo)
+
+_LAZY = ("cells", "pylint_jax", "rules", "run", "traffic")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module 'repro.analysis' has no attribute "
+                         f"{name!r}")

@@ -1,0 +1,176 @@
+"""Lightweight AST lint for repo-specific jax footguns.
+
+Two source-scoped rules (warning severity), run by the analysis CLI
+over ``src/repro``:
+
+- ``jit-module-array``: a module-level jax array (``W = jnp.zeros(...)``
+  or ``jax.device_put(...)``) referenced from inside a jitted function.
+  Closing over a module-level array bakes its *placement* into the
+  trace — the PR 7 multi-process footgun: under ``jax.distributed`` the
+  closed-over constant is addressable on one process only and jit
+  refuses (or silently re-commits) it. Pass arrays as arguments.
+- ``deprecated-spelling``: call sites still using spellings that raise
+  ``ReproDeprecationWarning`` at runtime (``get_scheme()``,
+  ``get_mode()``, ``comm_scheme=`` / ``exchange_mode=`` keywords) —
+  they warn today and break when the deprecation window closes.
+
+Pure stdlib (ast) — no jax import, so the lint runs anywhere.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import finding, register_rule
+
+# call roots that create/commit a jax array at module scope
+_ARRAY_ROOTS = ("jnp", "jax")
+# deprecated call-target names (defined — and allowed — only here)
+_DEPRECATED_CALLS = ("get_scheme", "get_mode")
+_DEF_MODULE = os.path.join("core", "distributed.py")
+# deprecated keyword spellings; resolve_exchange/_fold_* own the
+# fold-in implementation so their call sites are the one exception
+_DEPRECATED_KWARGS = ("comm_scheme", "exchange_mode", "scheme_name")
+_KWARG_OK_CALLEES = ("resolve_exchange",)
+
+
+def _call_root(node: ast.AST) -> str | None:
+    """Leftmost Name of a (possibly dotted) call target."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _call_leaf(node: ast.AST) -> str | None:
+    """Rightmost attribute / bare name of a call target."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """jax.jit / jit / functools.partial(jax.jit, ...)."""
+    if isinstance(dec, ast.Call):
+        if _call_leaf(dec.func) == "partial":
+            return any(_call_leaf(a) == "jit" for a in dec.args)
+        dec = dec.func
+    return _call_leaf(dec) == "jit"
+
+
+def _module_arrays(tree: ast.Module) -> dict[str, int]:
+    """name -> lineno of module-level jax-array bindings."""
+    out = {}
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = [t for t in node.targets if isinstance(t, ast.Name)]
+            value = node.value
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            targets, value = [node.target], node.value
+        else:
+            continue
+        if isinstance(value, ast.Call) and \
+                _call_root(value.func) in _ARRAY_ROOTS:
+            for t in targets:
+                out[t.id] = node.lineno
+    return out
+
+
+def _jitted_functions(tree: ast.Module):
+    """All function defs that end up jitted: decorated with jax.jit (or
+    partial(jax.jit, ...)), or wrapped later via ``g = jax.jit(f)``."""
+    fns = {n.name: n for n in ast.walk(tree)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    jitted = [f for f in fns.values()
+              if any(_is_jit_decorator(d) for d in f.decorator_list)]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _call_leaf(node.func) == "jit":
+            for a in node.args:
+                if isinstance(a, ast.Name) and a.id in fns:
+                    jitted.append(fns[a.id])
+    return jitted
+
+
+def _closure_reads(fn, names: dict[str, int]):
+    """(name, lineno) reads of ``names`` inside ``fn`` that are not
+    shadowed by a parameter or a local binding."""
+    args = fn.args
+    params = {a.arg for a in (args.posonlyargs + args.args
+                              + args.kwonlyargs)}
+    if args.vararg:
+        params.add(args.vararg.arg)
+    if args.kwarg:
+        params.add(args.kwarg.arg)
+    local = set(params)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            local.add(node.id)
+    return [(n.id, n.lineno) for n in ast.walk(fn)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+            and n.id in names and n.id not in local]
+
+
+def lint_file(path: str, rel: str) -> list:
+    with open(path) as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [finding("deprecated-spelling", f"{rel}:{e.lineno or 0}",
+                        f"unparseable source: {e.msg}")]
+    out = []
+    arrays = _module_arrays(tree)
+    if arrays:
+        for fn in _jitted_functions(tree):
+            for name, lineno in _closure_reads(fn, arrays):
+                out.append(finding(
+                    "jit-module-array", f"{rel}:{lineno}",
+                    f"jitted function {fn.name!r} closes over "
+                    f"module-level array {name!r} (bound at line "
+                    f"{arrays[name]}) — pass it as an argument; "
+                    f"closed-over arrays break multi-process runs"))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        leaf = _call_leaf(node.func)
+        if leaf in _DEPRECATED_CALLS and not rel.endswith(_DEF_MODULE):
+            out.append(finding(
+                "deprecated-spelling", f"{rel}:{node.lineno}",
+                f"call to deprecated {leaf}() — use the ExchangeConfig "
+                f"spec grammar instead"))
+        if leaf not in _KWARG_OK_CALLEES:
+            for kw in node.keywords:
+                if kw.arg in _DEPRECATED_KWARGS:
+                    out.append(finding(
+                        "deprecated-spelling", f"{rel}:{node.lineno}",
+                        f"deprecated keyword {kw.arg}= in {leaf}() call "
+                        f"— fold it into the exchange= spec"))
+    return out
+
+
+def lint_source(root: str) -> list:
+    """Run both source rules over every .py under ``root``."""
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in ("__pycache__", ".git")]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                path = os.path.join(dirpath, fn)
+                out.extend(lint_file(path, os.path.relpath(path, root)))
+    return out
+
+
+@register_rule("jit-module-array", "warning", scope="source")
+def rule_jit_module_array(root):
+    """Jitted function closes over a module-level jax array (the
+    multi-process placement footgun)."""
+    return [f for f in lint_source(root) if f.rule == "jit-module-array"]
+
+
+@register_rule("deprecated-spelling", "warning", scope="source")
+def rule_deprecated_spelling(root):
+    """Call sites using ReproDeprecationWarning-deprecated spellings."""
+    return [f for f in lint_source(root)
+            if f.rule == "deprecated-spelling"]

@@ -1,0 +1,217 @@
+"""The cell-scoped lint rules over compiled collective graphs.
+
+Each rule receives a :class:`repro.analysis.cells.CellContext` and
+returns a (possibly empty) list of findings. Severities:
+
+- ``error`` — a correctness/accounting invariant the CI gate fails on;
+- ``warning`` — a known inefficiency worth surfacing (e.g. the f32 HBM
+  intermediate on the codec gather side named in ROADMAP).
+
+Importing this module populates the registry in
+:mod:`repro.analysis.findings`.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import finding, register_rule
+from repro.analysis.traffic import (CODEC_WIRE_DTYPE, QUANTIZED_DTYPES,
+                                    derived_round_traffic, padded_len,
+                                    quantized_wire_dtypes)
+
+FP_BYTES = 4                 # the exchanged update is f32
+SCALE_BYTES = 4              # one f32 absmax scale per worker payload
+
+
+@register_rule("bytes-match", "error")
+def rule_bytes_match(ctx):
+    """Modelled comm_bytes_per_round equals bytes derived from the HLO
+    collectives (the paper's modelled-vs-actual gap, asserted to zero)."""
+    out = []
+    if ctx.K < 2:
+        return out
+    modelled = ctx.trainer.comm_bytes_per_round()
+    derived = derived_round_traffic(ctx.graph, ctx.exchange, ctx.K)
+    if modelled != derived:
+        out.append(finding(
+            "bytes-match", ctx.id,
+            f"modelled comm_bytes_per_round {modelled} != {derived} "
+            f"derived from the HLO collectives (K={ctx.K})"))
+    # reduce-scatter padding cross-check against the ONE padded_len
+    # owner (repro.comm.collectives): the compiled rs operand must be
+    # the K-padded update vector
+    if (ctx.exchange.scheme.transport == "reduce_scatter"
+            and ctx.exchange.backend == "xla"):
+        rs_bytes = sum(op.operand_bytes
+                       for op in ctx.graph.ops("reduce-scatter"))
+        expect = padded_len(ctx.update_len, ctx.K) * FP_BYTES
+        if rs_bytes != expect:
+            out.append(finding(
+                "bytes-match", ctx.id,
+                f"reduce-scatter operand is {rs_bytes} bytes; "
+                f"padded_len({ctx.update_len}, {ctx.K}) models "
+                f"{expect}"))
+    return out
+
+
+@register_rule("wire-dtype", "error")
+def rule_wire_dtype(ctx):
+    """Codec cells ship only their quantized dtype on the wire (s8 for
+    int8, packed u8 for int4) — no f32 payload escapes."""
+    out = []
+    if ctx.K < 2:
+        return out
+    codec = ctx.exchange.scheme.codec.name
+    expect_dt = CODEC_WIRE_DTYPE.get(codec)
+    seen = quantized_wire_dtypes(ctx.graph)
+    expect = {expect_dt} if expect_dt else set()
+    if seen != expect:
+        out.append(finding(
+            "wire-dtype", ctx.id,
+            f"quantized collective dtypes {sorted(seen) or '{}'} do not "
+            f"match codec {codec!r} (expected {sorted(expect) or '{}'})"))
+    if expect_dt:
+        # a quantizing codec may move f32 only as per-worker scales
+        for op in ctx.graph.collectives:
+            if op.kind not in ("all-gather", "collective-permute"):
+                continue
+            fat = [s for s in op.operand_shapes
+                   if s.dtype == "f32" and s.bytes > SCALE_BYTES]
+            for s in fat:
+                out.append(finding(
+                    "wire-dtype", ctx.id,
+                    f"{op.kind} {op.name} ships f32{list(s.dims)} "
+                    f"({s.bytes} bytes) under the {codec} codec — "
+                    f"f32 payload escaped to the wire"))
+    return out
+
+
+def _is_single_ring(pairs, K: int) -> bool:
+    if pairs is None or len(pairs) != K:
+        return False
+    nxt = dict(pairs)
+    if len(nxt) != K or set(nxt) != set(range(K)) \
+            or set(nxt.values()) != set(range(K)):
+        return False
+    # follow the permutation from 0: must return to 0 in exactly K hops
+    seen, cur = 0, 0
+    while True:
+        cur = nxt[cur]
+        seen += 1
+        if cur == 0:
+            return seen == K
+        if seen > K:
+            return False
+
+
+@register_rule("ring-topology", "error")
+def rule_ring_topology(ctx):
+    """Every ring-backend collective-permute's source-target pairs form
+    one closed K-ring (the deadlock/ordering invariant per hop)."""
+    out = []
+    if ctx.exchange.backend != "ring" or ctx.K < 2:
+        return out
+    cps = ctx.graph.ops("collective-permute")
+    if not cps:
+        out.append(finding(
+            "ring-topology", ctx.id,
+            "ring backend compiled to no collective-permute ops"))
+        return out
+    for op in cps:
+        if not _is_single_ring(op.source_target_pairs, ctx.K):
+            out.append(finding(
+                "ring-topology", ctx.id,
+                f"collective-permute {op.name} pairs "
+                f"{op.source_target_pairs} are not a single closed "
+                f"{ctx.K}-ring"))
+    return out
+
+
+@register_rule("membership-invariant", "error")
+def rule_membership_invariant(ctx):
+    """Elastic drop: cells compile to the identical collective set as
+    full membership — one compile serves all rounds."""
+    if ctx.exchange.membership.empty or ctx.K < 2:
+        return []
+    import dataclasses
+
+    from repro.core.distributed import MembershipSchedule
+    full_spec = dataclasses.replace(
+        ctx.exchange, membership=MembershipSchedule()).spec
+    vctx = ctx.compile_variant(full_spec)
+    if ctx.graph.signature() != vctx.graph.signature():
+        return [finding(
+            "membership-invariant", ctx.id,
+            f"collective set differs from full membership "
+            f"({full_spec!r}): membership masking leaked into the "
+            f"compiled collectives")]
+    return []
+
+
+@register_rule("f32-intermediate", "warning")
+def rule_f32_intermediate(ctx):
+    """f32 HBM tensors materialized between a codec decode and its
+    mean/apply (the gather-side dequantize inefficiency in ROADMAP)."""
+    codec = ctx.exchange.scheme.codec.name
+    if not CODEC_WIRE_DTYPE.get(codec) or ctx.K < 2:
+        return []
+    names = [op.name for op in ctx.graph.collectives
+             if op.kind in ("all-gather", "collective-permute")
+             and any(dt in QUANTIZED_DTYPES for dt in op.operand_dtypes)]
+    # a decode that materializes the full K-stacked f32 update before
+    # reducing burns K x update_len x 4 bytes of HBM per round
+    threshold = ctx.K * ctx.update_len * FP_BYTES
+    fat = [i for i in ctx.graph.downstream(names, depth=4)
+           if sum(s.bytes for s in i.result_shapes
+                  if s.dtype == "f32") >= threshold]
+    if fat:
+        worst = max(fat, key=lambda i: i.result_bytes)
+        return [finding(
+            "f32-intermediate", ctx.id,
+            f"{len(fat)} f32 intermediate(s) >= {threshold} bytes "
+            f"within 4 ops of the decoded payload (e.g. {worst.op} "
+            f"{worst.name}: {worst.result_bytes} bytes) — fuse "
+            f"decode+reduce to skip the stacked f32 HBM roundtrip")]
+    return []
+
+
+@register_rule("single-compile", "error")
+def rule_single_compile(ctx):
+    """A driver run triggers exactly one jit trace of the round function
+    (recompiles would hide in wall-clock, not in bytes)."""
+    import jax
+
+    from repro.core.distributed import place_state
+
+    jitted = ctx.round_fn.jitted
+    if not hasattr(jitted, "_cache_size"):
+        return [finding(
+            "single-compile", ctx.id,
+            "jit cache-size hook unavailable on this jax version — "
+            "compile count not checked")]
+    local, shared = place_state(ctx.round_fn.mesh, *ctx.trainer.init_state())
+    key = jax.random.key(0)
+    # rounds 1-2 are the placement warmup: round 1 sees freshly
+    # device_put state (explicit NamedShardings), round 2 sees the jit's
+    # own output shardings — one extra cache entry there is expected,
+    # and from round 3 on every round must reuse the steady-state trace
+    warmup = 0
+    for t in (1, 2, 3, 4, 5):
+        key, sub = jax.random.split(key)
+        local, shared, metric = ctx.round_fn(local, shared, sub, t)
+        if t == 2:
+            warmup = jitted._cache_size()
+    jax.block_until_ready(metric)
+    out = []
+    retraces = jitted._cache_size() - warmup
+    if retraces:
+        out.append(finding(
+            "single-compile", ctx.id,
+            f"steady-state rounds retraced the round function "
+            f"{retraces} time(s) after warmup — a per-round value is "
+            f"being treated as static"))
+    if warmup > 2:
+        out.append(finding(
+            "single-compile", ctx.id,
+            f"the first two driver rounds triggered {warmup} jit "
+            f"traces (expected 1, plus at most 1 placement-warmup "
+            f"entry)"))
+    return out

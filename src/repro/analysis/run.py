@@ -1,0 +1,142 @@
+"""`python -m repro.analysis` — sweep the exchange matrix through the
+lint-rule registry, print a findings table, write ANALYSIS.json, exit
+nonzero on error-severity findings.
+
+Device faking happens here (before jax import) the same way
+``repro.bench.run`` does it: the matrix needs a K=4 mesh, so the CLI
+appends ``--xla_force_host_platform_device_count`` to XLA_FLAGS unless
+jax is already imported with enough devices.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis of compiled exchange cells: lift "
+                    "each cell's optimized HLO into a collective graph "
+                    "and run the lint-rule registry over it.")
+    p.add_argument("--cells", default="all",
+                   help="all | matrix | regime | backend | "
+                        "comma-separated algo=spec list (default: all)")
+    p.add_argument("--out", default="ANALYSIS.json",
+                   help="findings JSON path (default: ANALYSIS.json)")
+    p.add_argument("--devices", type=int, default=4,
+                   help="CPU devices to fake for the worker mesh "
+                        "(default: 4, the smoke-matrix K)")
+    p.add_argument("--src", default=None,
+                   help="source tree for the AST lint rules "
+                        "(default: the installed repro package dir)")
+    p.add_argument("--no-source-lint", action="store_true",
+                   help="skip the source-scoped AST rules")
+    p.add_argument("--inject", choices=("wire-f32",), default=None,
+                   help="inject a known violation (validates that the "
+                        "gate trips): wire-f32 analyzes a full-precision "
+                        "compile under an int8-claiming exchange")
+    return p.parse_args(argv)
+
+
+def _fake_devices(n: int) -> None:
+    if "jax" in sys.modules:
+        import jax
+        if len(jax.devices()) < n:
+            print(f"warning: jax already imported with "
+                  f"{len(jax.devices())} device(s); --devices {n} "
+                  f"ignored", file=sys.stderr)
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}").strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def _injected_cell(cells_mod):
+    """A deliberately broken cell: the compressed:f32 compile analyzed
+    under an exchange that CLAIMS the int8 codec — wire-dtype and
+    bytes-match must both fire."""
+    import dataclasses
+
+    base = cells_mod.compile_cell(cells_mod.Cell("cocoa", "compressed:f32"))
+    claimed = cells_mod.build_trainer(
+        cells_mod.Cell("cocoa", "compressed:int8"), K=base.K)
+    return dataclasses.replace(
+        base,
+        cell=cells_mod.Cell("cocoa", "compressed:int8[injected-f32-wire]"),
+        trainer=claimed, exchange=claimed.exchange)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    _fake_devices(args.devices)
+
+    # heavy imports only after the device fake is in place
+    from repro.analysis import cells as cells_mod
+    from repro.analysis import pylint_jax, rules  # noqa: F401 (registers)
+    from repro.analysis.findings import RULES, SEVERITIES
+
+    try:
+        selected = cells_mod.resolve_cells(args.cells)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    findings, analyzed = [], []
+    for cell in selected:
+        ctx = cells_mod.compile_cell(cell)
+        analyzed.append({"cell": cell.id, "K": ctx.K,
+                         "collectives": ctx.graph.total_count,
+                         "hlo_operand_bytes":
+                             ctx.graph.total_operand_bytes})
+        for rule in RULES.values():
+            if rule.scope == "cell":
+                findings.extend(rule.check(ctx))
+        print(f"analyzed {cell.id} "
+              f"({ctx.graph.total_count} collectives)")
+    if args.inject == "wire-f32":
+        ctx = _injected_cell(cells_mod)
+        analyzed.append({"cell": ctx.id, "K": ctx.K, "injected": True,
+                         "collectives": ctx.graph.total_count,
+                         "hlo_operand_bytes":
+                             ctx.graph.total_operand_bytes})
+        for rule in RULES.values():
+            if rule.scope == "cell":
+                findings.extend(rule.check(ctx))
+    if not args.no_source_lint:
+        src_root = args.src or os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))
+        for rule in RULES.values():
+            if rule.scope == "source":
+                findings.extend(rule.check(src_root))
+
+    counts = {s: sum(1 for f in findings if f.severity == s)
+              for s in SEVERITIES}
+    print()
+    if findings:
+        w = max(len(f.rule) for f in findings)
+        for f in sorted(findings,
+                        key=lambda f: (SEVERITIES.index(f.severity),
+                                       f.rule, f.cell)):
+            print(f"{f.severity.upper():7s} {f.rule:{w}s} {f.cell}\n"
+                  f"        {f.message}")
+    print(f"\n{len(analyzed)} cells analyzed, {len(RULES)} rules: "
+          + ", ".join(f"{counts[s]} {s}" for s in SEVERITIES))
+    report = {
+        "cells": analyzed,
+        "rules": [r.to_json() for r in RULES.values()],
+        "findings": [f.to_json() for f in findings],
+        "summary": {"cells": len(analyzed), **counts},
+    }
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"wrote {args.out}")
+    return 1 if counts["error"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""Derive per-round wire traffic from a collective graph.
+
+This is the ONE place HLO bytes become modelled-traffic comparisons:
+``bench_drivers``, the analysis rules, and the launch-layer estimators
+all call :func:`derived_round_traffic` instead of re-walking HLO text.
+
+Derivations (paper §4's per-algorithm traffic decomposition):
+
+- master-centric transports (``persistent``, ``spark_faithful``,
+  ``compressed:*`` on the ``xla`` backend): every worker sends its
+  per-worker collective operand up and receives the aggregate back, so
+  derived = 2 x K x per-worker operand bytes, excluding the scalar f32
+  metric psum (4 bytes) — a convergence probe, not update traffic;
+- ``reduce_scatter``: the ring volume — (K-1) x the reduce-scatter
+  operand plus K x (K-1) x the all-gather shard operand;
+- ``ring`` backend: K x the collective-permute operand bytes (each
+  unrolled hop is one ppermute op moved by all K ranks).
+
+``padded_len`` is imported from :mod:`repro.comm.collectives` — the
+single owner of the reduce-scatter padding formula (a cross-check test
+asserts this module does not grow its own copy).
+"""
+from __future__ import annotations
+
+from repro.comm.collectives import padded_len  # noqa: F401  (single owner)
+
+from repro.analysis.graph import CollectiveGraph
+
+# the one scalar f32 convergence-metric psum every round carries
+SCALAR_METRIC_BYTES = 4
+
+# wire dtypes a quantizing codec may put on the wire
+QUANTIZED_DTYPES = ("s8", "u8", "s4", "u4")
+
+# codec name -> the sub-f32 dtype its payload collective must carry
+# (None: full-precision f32 is the expected wire format)
+CODEC_WIRE_DTYPE = {"f32": None, "int8": "s8", "int4": "u8"}
+
+
+def derived_round_traffic(graph: CollectiveGraph, exchange, K: int) -> int:
+    """Bytes/round implied by the compiled HLO for one exchange cell.
+
+    ``exchange`` is a resolved ``ExchangeConfig`` (only ``.backend`` and
+    ``.scheme.transport`` are read, so tests can pass any duck)."""
+    if K < 2:
+        return 0
+    if exchange.backend == "ring":
+        cp = sum(op.operand_bytes for op in graph.ops("collective-permute"))
+        return K * cp
+    if exchange.scheme.transport == "reduce_scatter":
+        rs = sum(op.operand_bytes for op in graph.ops("reduce-scatter"))
+        ag = sum(op.operand_bytes for op in graph.ops("all-gather"))
+        return (K - 1) * rs + K * (K - 1) * ag
+    payload = sum(op.operand_bytes for op in graph.collectives
+                  if not _is_metric_psum(op))
+    return 2 * K * payload
+
+
+def _is_metric_psum(op) -> bool:
+    return (op.kind == "all-reduce"
+            and op.operand_bytes <= SCALAR_METRIC_BYTES)
+
+
+def quantized_wire_dtypes(graph: CollectiveGraph) -> set[str]:
+    """Sub-f32 dtypes present in payload-moving collectives (all-gather
+    and collective-permute ops): s8 for int8, u8 for packed int4."""
+    out = set()
+    for op in graph.collectives:
+        if op.kind not in ("all-gather", "collective-permute"):
+            continue
+        out.update(dt for dt in op.operand_dtypes
+                   if dt in QUANTIZED_DTYPES)
+    return out
+
+
+def payload_collectives(graph: CollectiveGraph) -> tuple:
+    """Collectives that move update/state payload (metric psum excluded)."""
+    return tuple(op for op in graph.collectives if not _is_metric_psum(op))

@@ -16,10 +16,10 @@ import traceback    # noqa: E402
 
 import jax          # noqa: E402
 
+from repro.analysis.graph import lift_hlo  # noqa: E402
 from repro.configs import ARCHS, SHAPES, get_config  # noqa: E402
 from repro.launch import build  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.utils.hlo import parse_collectives  # noqa: E402
 
 
 def run_pair(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True,
@@ -39,7 +39,7 @@ def run_pair(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True,
     cost = compiled.cost_analysis()
     if isinstance(cost, list):  # jax < 0.5 returns a one-element list
         cost = cost[0] if cost else {}
-    coll = parse_collectives(compiled.as_text())
+    coll = lift_hlo(compiled.as_text())
     n_dev = mesh.devices.size
     rec = {
         "arch": arch, "shape": shape, "multi_pod": multi_pod,
@@ -59,7 +59,7 @@ def run_pair(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True,
         "hlo_bytes": cost.get("bytes accessed", 0.0),
         "collectives": {k: {"count": v[0], "operand_bytes": v[1],
                             "result_bytes": v[2]}
-                        for k, v in coll.by_kind.items()},
+                        for k, v in coll.by_kind().items()},
         "collective_operand_bytes": coll.total_operand_bytes,
     }
     if verbose:

@@ -33,15 +33,15 @@ from repro.configs.base import padded_vocab  # noqa: E402
 from repro.launch import build  # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
                                make_production_mesh)
+from repro.analysis.graph import lift_hlo  # noqa: E402
 from repro.models.transformer import _period, layer_plan  # noqa: E402
-from repro.utils.hlo import parse_collectives  # noqa: E402
 
 
 def _cost_of(built) -> dict:
     from repro.utils import compat
     compiled = built.lowered.compile()
     ca = compat.cost_analysis(compiled)
-    coll = parse_collectives(compiled.as_text())
+    coll = lift_hlo(compiled.as_text())
     mem = compiled.memory_analysis()
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -1,52 +1,23 @@
-"""Parse optimized HLO text for collective-communication traffic.
+"""Aggregate collective-traffic view over optimized HLO text.
 
-``compiled.as_text()`` (post-SPMD-partitioning HLO) is the only place the
-GSPMD-inserted collectives are visible.  Operand types are not inline in
-the text (``all-reduce(%wrapped_reduce)``), so we first build a symbol
-table mapping every instruction name to its result byte size, then sum
-operand sizes for every collective op.
+The parsing itself lives in :mod:`repro.analysis.graph` (per-op records
+with dtypes, replica groups, channel ids, source-target pairs); this
+module keeps the original aggregate API — :class:`CollectiveStats`,
+:func:`parse_collectives`, :func:`collective_bytes` — as a thin view
+over the lifted graph. New code should use the graph directly.
 
-Ops counted: all-reduce, all-gather, reduce-scatter, all-to-all,
-collective-permute (and their -start async variants).
+Delegating fixed three long-standing parser gaps (regression corpus
+under ``tests/data/hlo/``): 4-bit wire dtypes (``s4``/``u4``) counted
+as 0 bytes, async ``-start``/``-done`` pairs double-counted the operand
+into the start op's tuple result, and tuple results whose layouts
+contain parens (``{0:T(256)}``) were truncated by the old one-regex
+type scan.
 """
 from __future__ import annotations
 
-import re
 from dataclasses import dataclass, field
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
-
-# `%name = dtype[d0,d1]{layout} opcode(...)`  (tuple results handled below)
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^=]*?\)|[\w\[\],{}/:#\s]*?)\s+"
-    r"(?P<op>[\w\-]+)\((?P<operands>.*)$")
-_SHAPE_RE = re.compile(r"(?P<dt>[a-z]\d*[a-z]*\d*(?:e\d+m\d+(?:fn)?)?)\[(?P<dims>[\d,]*)\]")
-
-COLLECTIVE_OPS = (
-    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-    "collective-permute",
-)
-
-
-def _type_bytes(type_str: str) -> int:
-    """Total bytes of an HLO type string (handles tuples)."""
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        dt = m.group("dt")
-        if dt not in _DTYPE_BYTES:
-            continue
-        dims = m.group("dims")
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+from repro.analysis.graph import COLLECTIVE_OPS, lift_hlo  # noqa: F401
 
 
 @dataclass
@@ -89,36 +60,11 @@ class CollectiveStats:
 
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
-    """Sum operand/result sizes of every collective op in optimized HLO text."""
-    # Pass 1: symbol table  name -> result bytes.
-    sizes: dict[str, int] = {}
-    records = []  # (kind, operand_names, result_bytes)
-    for line in hlo_text.splitlines():
-        m = _INSTR_RE.match(line)
-        if not m:
-            continue
-        name, type_str, op = m.group("name"), m.group("type"), m.group("op")
-        sizes[name] = _type_bytes(type_str)
-        base_op = op.replace("-start", "").replace("-done", "")
-        if base_op in COLLECTIVE_OPS and not op.endswith("-done"):
-            # operands: comma-separated %refs before the `)` that closes the call
-            ops_str = m.group("operands")
-            depth = 1
-            out = []
-            for ch in ops_str:
-                if ch == "(":
-                    depth += 1
-                elif ch == ")":
-                    depth -= 1
-                    if depth == 0:
-                        break
-                out.append(ch)
-            operand_names = re.findall(r"%([\w.\-]+)", "".join(out))
-            records.append((base_op, operand_names, sizes[name]))
+    """Sum operand/result sizes of every collective op in optimized HLO
+    text (aggregate view of :func:`repro.analysis.graph.lift_hlo`)."""
     stats = CollectiveStats()
-    for kind, operand_names, result_bytes in records:
-        ob = sum(sizes.get(n, 0) for n in operand_names)
-        stats.add(kind, ob, result_bytes)
+    for op in lift_hlo(hlo_text).collectives:
+        stats.add(op.kind, op.operand_bytes, op.result_bytes)
     return stats
 
 

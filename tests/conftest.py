@@ -22,6 +22,9 @@ TEST_TIERS = {
     "test_distributed.py::test_dryrun_production_mesh_smoke": "slow",
     "test_collectives.py::test_ring_sharded_trainer_matches_virtual": "slow",
     "test_dist_launch.py::test_two_process_matches_single": "slow",
+    "test_analysis_cli.py::test_cli_clean_cells_write_json": "slow",
+    "test_analysis_cli.py::test_cli_injected_violation_exits_nonzero": "slow",
+    "test_analysis_cli.py::test_graph_extraction_per_transport": "slow",
 }
 
 _KNOWN_TIERS = ("slow",)

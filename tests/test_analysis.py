@@ -1,0 +1,345 @@
+"""repro.analysis: collective-graph lifting (corpus-pinned), traffic
+derivation, lint rules, and the AST source lint."""
+import os
+import types
+
+import pytest
+
+from repro.analysis import cells as acells
+from repro.analysis import pylint_jax, rules  # noqa: F401  (registers rules)
+from repro.analysis.findings import RULES, Finding, max_severity
+from repro.analysis.graph import (Shape, _iota_replica_groups, lift_hlo,
+                                  parse_shapes)
+from repro.analysis.traffic import (derived_round_traffic,
+                                    quantized_wire_dtypes)
+from repro.utils.hlo import parse_collectives
+
+CORPUS = os.path.join(os.path.dirname(__file__), "data", "hlo")
+
+
+def corpus(name: str) -> str:
+    with open(os.path.join(CORPUS, name)) as f:
+        return f.read()
+
+
+def _exchange(transport="persistent", backend="xla"):
+    """Duck-typed stand-in for ExchangeConfig (traffic reads only
+    .backend and .scheme.transport)."""
+    return types.SimpleNamespace(
+        backend=backend, scheme=types.SimpleNamespace(transport=transport))
+
+
+# ---------------------------------------------------------------------------
+# graph lifting on the checked-in corpus (real jax 0.4 CPU HLO)
+# ---------------------------------------------------------------------------
+
+def test_int8_gather_per_op_records():
+    g = lift_hlo(corpus("int8_gather.txt"))
+    assert g.by_kind() == {"all-gather": (2, 100, 400),
+                           "all-reduce": (1, 4, 4)}
+    payload = next(op for op in g.ops("all-gather")
+                   if "s8" in op.operand_dtypes)
+    assert payload.operand_shapes == (Shape("s8", (1, 96)),)
+    assert payload.result_shapes == (Shape("s8", (4, 96)),)
+    assert payload.operand_bytes == 96 and payload.result_bytes == 384
+    assert payload.replica_groups == ((0, 1, 2, 3),)
+    scale = next(op for op in g.ops("all-gather") if op is not payload)
+    assert scale.operand_shapes == (Shape("f32", (1,)),)
+    # channel ids are per-op and unique across the module
+    chans = [op.channel_id for op in g.collectives]
+    assert None not in chans and len(set(chans)) == len(chans)
+
+
+def test_int8_gather_decode_dataflow():
+    g = lift_hlo(corpus("int8_gather.txt"))
+    payload = next(op for op in g.ops("all-gather")
+                   if "s8" in op.operand_dtypes)
+    down = g.downstream([payload.name], depth=1)
+    decode = next(i for i in down if i.op == "fusion")
+    # the gather-side decode materializes the K-stacked f32 update in
+    # HBM — the inefficiency the f32-intermediate rule flags
+    assert decode.result_shapes == (Shape("f32", (4, 96)),)
+    assert decode.result_bytes == 4 * 96 * 4
+
+
+def test_ring_int4_pairs_and_bytes():
+    g = lift_hlo(corpus("ring_int4.txt"))
+    cps = g.ops("collective-permute")
+    assert len(cps) == 6
+    ring = ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert all(op.source_target_pairs == ring for op in cps)
+    sizes = sorted(op.operand_bytes for op in cps)
+    assert sizes == [4, 4, 4, 48, 48, 48]  # 3 f32[] scale + 3 u8[48] hops
+    assert quantized_wire_dtypes(g) == {"u8"}
+    assert len(g.ops("all-reduce")) == 1  # the scalar metric psum
+
+
+def test_async_start_done_counted_once():
+    g = lift_hlo(corpus("async_pair.txt"))
+    # -start counts, -done doesn't; the start op's tuple result drops
+    # the operand alias (the old parser summed 96+384 floats there)
+    assert g.total_count == 2
+    ag = g.ops("all-gather")[0]
+    assert ag.asynchronous
+    assert ag.operand_bytes == 96 * 4
+    assert ag.result_bytes == 384 * 4
+    ar = g.ops("all-reduce")[0]
+    assert ar.operand_bytes == ar.result_bytes == 96 * 4
+
+
+def test_int4_wire_dtypes_sized_in_bits():
+    g = lift_hlo(corpus("int4_wire.txt"))
+    ag = g.ops("all-gather")[0]
+    assert ag.operand_bytes == 48      # s4[96]: 96 * 4 bits = 48 bytes
+    assert ag.result_bytes == 192      # s4[384]
+    cp = g.ops("collective-permute")[0]
+    assert cp.operand_bytes == 48      # u4[95]: ceil(95 * 4 / 8)
+    assert quantized_wire_dtypes(g) == {"s4", "u4"}
+
+
+def test_tuple_layout_result_sized_correctly():
+    g = lift_hlo(corpus("tuple_layout.txt"))
+    rs = g.ops("reduce-scatter")[0]
+    ag = g.ops("all-gather")[0]
+    assert (rs.operand_bytes, rs.result_bytes) == (384, 96)
+    assert (ag.operand_bytes, ag.result_bytes) == (96, 384)
+    # iota replica-group form expands to the literal groups
+    assert rs.replica_groups == ((0, 1, 2, 3),)
+    # the tuple result whose layouts contain parens ({0:T(256)}) is
+    # sized as both elements — the old one-regex scan truncated it
+    assert g.instructions["out"].result_bytes == 96 + 384
+
+
+def test_iota_replica_groups_expansion():
+    assert _iota_replica_groups((2, 4), (8,), None) == \
+        ((0, 1, 2, 3), (4, 5, 6, 7))
+    # [2,4]<=[2,4]T(1,0): transpose the 2x4 iota before grouping
+    assert _iota_replica_groups((2, 4), (2, 4), (1, 0)) == \
+        ((0, 4, 1, 5), (2, 6, 3, 7))
+
+
+def test_parse_shapes_scalar_and_unknown():
+    shapes = parse_shapes("(f32[], pred[3], token[])")
+    assert shapes == (Shape("f32", ()), Shape("pred", (3,)))
+    assert shapes[0].bytes == 4
+
+
+def test_parse_collectives_is_graph_aggregate():
+    for name in ("int8_gather.txt", "ring_int4.txt", "async_pair.txt",
+                 "int4_wire.txt", "tuple_layout.txt"):
+        txt = corpus(name)
+        stats = parse_collectives(txt)
+        assert stats.by_kind == lift_hlo(txt).by_kind()
+
+
+# ---------------------------------------------------------------------------
+# traffic derivation (the single owner bench_drivers delegates to)
+# ---------------------------------------------------------------------------
+
+def test_derived_traffic_master_centric():
+    g = lift_hlo(corpus("int8_gather.txt"))
+    # payload operands (96 + 4) each way for K workers; the 4-byte
+    # metric psum excluded
+    assert derived_round_traffic(g, _exchange("compressed"), 4) == \
+        2 * 4 * 100
+    assert derived_round_traffic(g, _exchange("compressed"), 1) == 0
+
+
+def test_derived_traffic_reduce_scatter():
+    g = lift_hlo(corpus("tuple_layout.txt"))
+    ex = _exchange("reduce_scatter")
+    assert derived_round_traffic(g, ex, 4) == 3 * 384 + 4 * 3 * 96
+
+
+def test_derived_traffic_ring():
+    g = lift_hlo(corpus("ring_int4.txt"))
+    ex = _exchange("compressed", backend="ring")
+    assert derived_round_traffic(g, ex, 4) == 4 * (3 * 48 + 3 * 4)
+
+
+def test_padded_len_single_owner():
+    from repro.analysis import traffic
+    from repro.comm import collectives as comm
+    # the analyzer must not grow its own padding formula
+    assert traffic.padded_len is comm.padded_len
+    # and the modelled reduce-scatter bytes really use it: (K-1)/K of
+    # the K-padded f32 vector moves each way
+    from repro.comm.codec import get_codec
+    f32 = get_codec("f32")
+    for L in (95, 96, 97):
+        for K in (2, 3, 4):
+            assert comm.XLABackend().wire_bytes(
+                "reduce_scatter", f32, L, K) == \
+                2 * (K - 1) * traffic.padded_len(L, K) * 4
+
+
+# ---------------------------------------------------------------------------
+# rule units on corpus-backed contexts (no compile needed)
+# ---------------------------------------------------------------------------
+
+def _ctx(graph, exchange, K=4, update_len=96, spec="test"):
+    return acells.CellContext(
+        cell=acells.Cell("cocoa", spec), trainer=None, round_fn=None,
+        hlo_text="", graph=graph, K=K, exchange=exchange,
+        update_len=update_len)
+
+
+def _full_exchange(spec):
+    from repro.core.distributed import ExchangeConfig
+    return ExchangeConfig.parse(spec)
+
+
+def test_rule_wire_dtype_flags_f32_escape():
+    # an int8-claiming exchange over a graph that gathers f32 payload
+    g = lift_hlo(corpus("tuple_layout.txt"))
+    ctx = _ctx(g, _full_exchange("compressed:int8"))
+    fs = RULES["wire-dtype"].check(ctx)
+    assert fs and all(f.severity == "error" for f in fs)
+    assert any("escaped" in f.message or "do not match" in f.message
+               for f in fs)
+
+
+def test_rule_wire_dtype_passes_on_matching_codec():
+    g = lift_hlo(corpus("int8_gather.txt"))
+    assert RULES["wire-dtype"].check(
+        _ctx(g, _full_exchange("compressed:int8"))) == []
+    # and the packed-int4 ring ships u8 on every hop
+    assert RULES["wire-dtype"].check(
+        _ctx(lift_hlo(corpus("ring_int4.txt")),
+             _full_exchange("compressed:int4/ring"))) == []
+
+
+def test_rule_ring_topology():
+    g = lift_hlo(corpus("ring_int4.txt"))
+    ctx = _ctx(g, _full_exchange("persistent/ring"))
+    assert RULES["ring-topology"].check(ctx) == []
+    # break one hop: a 2-cycle pair plus self-contained remainder is
+    # not a single closed 4-ring
+    broken = corpus("ring_int4.txt").replace(
+        "source_target_pairs={{0,1},{1,2},{2,3},{3,0}}",
+        "source_target_pairs={{0,1},{1,0},{2,3},{3,2}}", 1)
+    fs = RULES["ring-topology"].check(
+        _ctx(lift_hlo(broken), _full_exchange("persistent/ring")))
+    assert len(fs) == 1 and fs[0].severity == "error"
+
+
+def test_rule_ring_topology_rejects_missing_rank():
+    from repro.analysis.rules import _is_single_ring
+    assert _is_single_ring(((0, 1), (1, 2), (2, 3), (3, 0)), 4)
+    assert _is_single_ring(((1, 2), (2, 3), (3, 0), (0, 1)), 4)
+    assert not _is_single_ring(((0, 1), (1, 0), (2, 3), (3, 2)), 4)
+    assert not _is_single_ring(((0, 1), (1, 2), (2, 3)), 4)
+    assert not _is_single_ring(((0, 1), (1, 2), (2, 0), (3, 3)), 4)
+    assert not _is_single_ring(None, 4)
+
+
+def test_rule_f32_intermediate_fires_on_decode():
+    g = lift_hlo(corpus("int8_gather.txt"))
+    fs = RULES["f32-intermediate"].check(
+        _ctx(g, _full_exchange("compressed:int8")))
+    assert len(fs) == 1 and fs[0].severity == "warning"
+    assert "broadcast_multiply_fusion" in fs[0].message
+    # exact transports are exempt — f32 on the wire is their format
+    assert RULES["f32-intermediate"].check(
+        _ctx(g, _full_exchange("persistent"))) == []
+
+
+def test_rule_bytes_match_reports_mismatch():
+    g = lift_hlo(corpus("int8_gather.txt"))
+
+    class FakeTrainer:
+        def comm_bytes_per_round(self, t=None):
+            return 12345
+    ctx = _ctx(g, _full_exchange("compressed:int8"))
+    ctx.trainer = FakeTrainer()
+    fs = RULES["bytes-match"].check(ctx)
+    assert len(fs) == 1 and "12345" in fs[0].message
+    ctx.trainer.comm_bytes_per_round = lambda t=None: 2 * 4 * 100
+    assert RULES["bytes-match"].check(ctx) == []
+
+
+def test_registry_has_required_rules():
+    required = {"bytes-match", "wire-dtype", "ring-topology",
+                "membership-invariant", "f32-intermediate",
+                "single-compile", "jit-module-array",
+                "deprecated-spelling"}
+    assert required <= set(RULES)
+    assert all(RULES[r].severity == "error"
+               for r in ("bytes-match", "wire-dtype", "ring-topology",
+                         "membership-invariant", "single-compile"))
+    assert RULES["f32-intermediate"].severity == "warning"
+    assert max_severity([Finding("x", "warning", "c", "m"),
+                         Finding("y", "error", "c", "m")]) == "error"
+    assert max_severity([]) is None
+
+
+def test_cell_selectors():
+    assert len(acells.matrix_cells()) == 36
+    assert len(acells.all_cells()) == 36 + len(acells.REGIME_CELLS) + \
+        len(acells.BACKEND_CELLS)
+    sel = acells.resolve_cells("cocoa=compressed:int8/stale")
+    assert sel == (acells.Cell("cocoa", "compressed:int8/stale"),)
+    with pytest.raises(ValueError):
+        acells.resolve_cells("bogus=persistent")
+    with pytest.raises(Exception):
+        acells.resolve_cells("cocoa=not-a-transport")
+
+
+# ---------------------------------------------------------------------------
+# AST source lint
+# ---------------------------------------------------------------------------
+
+def _lint_str(tmp_path, src):
+    p = tmp_path / "mod.py"
+    p.write_text(src)
+    return pylint_jax.lint_file(str(p), "mod.py")
+
+
+def test_pylint_flags_jit_closed_module_array(tmp_path):
+    fs = _lint_str(tmp_path, (
+        "import jax\nimport jax.numpy as jnp\n"
+        "W = jnp.zeros((4,))\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return x + W\n"))
+    assert [f.rule for f in fs] == ["jit-module-array"]
+    assert fs[0].severity == "warning" and "'W'" in fs[0].message
+
+
+def test_pylint_flags_wrapped_jit(tmp_path):
+    fs = _lint_str(tmp_path, (
+        "import jax, jax.numpy as jnp\n"
+        "TABLE = jax.device_put(jnp.arange(8))\n"
+        "def g(x):\n"
+        "    return TABLE[x]\n"
+        "g_fast = jax.jit(g)\n"))
+    assert [f.rule for f in fs] == ["jit-module-array"]
+
+
+def test_pylint_allows_arrays_passed_as_args(tmp_path):
+    fs = _lint_str(tmp_path, (
+        "import jax, jax.numpy as jnp\n"
+        "W = jnp.zeros((4,))\n"
+        "@jax.jit\n"
+        "def f(x, W):\n"          # parameter shadows the module array
+        "    return x + W\n"
+        "def plain(x):\n"         # not jitted — closure is fine
+        "    return x + W\n"))
+    assert fs == []
+
+
+def test_pylint_flags_deprecated_spellings(tmp_path):
+    fs = _lint_str(tmp_path, (
+        "from repro.core.distributed import get_scheme, resolve_exchange\n"
+        "s = get_scheme('persistent')\n"
+        "cfg = make_config(comm_scheme='persistent')\n"
+        "ok = resolve_exchange(None, comm_scheme='persistent')\n"))
+    assert [f.rule for f in fs] == ["deprecated-spelling"] * 2
+    lines = sorted(f.cell for f in fs)
+    assert lines == ["mod.py:2", "mod.py:3"]
+
+
+def test_repo_source_is_lint_clean():
+    src_root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    fs = pylint_jax.lint_source(os.path.abspath(src_root))
+    assert fs == [], "\n".join(f"{f.cell}: {f.message}" for f in fs)

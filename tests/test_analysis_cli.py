@@ -1,0 +1,121 @@
+"""End-to-end tests for `python -m repro.analysis` and the per-transport
+collective-graph extraction (subprocesses with faked CPU devices — slow
+tier, see conftest.TEST_TIERS)."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cli(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)  # the CLI fakes its own devices
+    return subprocess.run([sys.executable, "-m", "repro.analysis"] + args,
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+def _run(py: str, ndev: int = 4, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", py], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+def test_cli_clean_cells_write_json(tmp_path):
+    out_json = tmp_path / "ANALYSIS.json"
+    r = _cli(["--cells",
+              "cocoa=persistent,minibatch_sgd=spark_faithful,"
+              "cocoa=compressed:int8",
+              "--out", str(out_json)])
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    report = json.loads(out_json.read_text())
+    assert set(report) == {"cells", "rules", "findings", "summary"}
+    assert report["summary"]["cells"] == 3
+    assert report["summary"]["error"] == 0
+    ids = {c["cell"] for c in report["cells"]}
+    assert ids == {"cocoa=persistent", "minibatch_sgd=spark_faithful",
+                   "cocoa=compressed:int8"}
+    assert all(c["collectives"] >= 2 for c in report["cells"])
+    rules = {r["id"] for r in report["rules"]}
+    assert {"bytes-match", "wire-dtype", "ring-topology",
+            "membership-invariant", "f32-intermediate", "single-compile",
+            "jit-module-array", "deprecated-spelling"} <= rules
+    # the int8 cell carries the known gather-side decode warning; the
+    # source lint over src/repro stays clean
+    warn = [f for f in report["findings"] if f["severity"] == "warning"]
+    assert any(f["rule"] == "f32-intermediate"
+               and f["cell"] == "cocoa=compressed:int8" for f in warn)
+    assert all(f["severity"] != "error" for f in report["findings"])
+
+
+def test_cli_injected_violation_exits_nonzero(tmp_path):
+    out_json = tmp_path / "ANALYSIS.json"
+    r = _cli(["--cells", "cocoa=persistent", "--inject", "wire-f32",
+              "--no-source-lint", "--out", str(out_json)])
+    assert r.returncode == 1, r.stdout + "\n" + r.stderr
+    report = json.loads(out_json.read_text())
+    errs = [f for f in report["findings"] if f["severity"] == "error"]
+    assert errs, report["findings"]
+    assert {f["rule"] for f in errs} == {"bytes-match", "wire-dtype"}
+    assert all("injected-f32-wire" in f["cell"] for f in errs)
+    # the honest cell contributed no errors
+    assert report["summary"]["error"] == len(errs)
+
+
+def test_graph_extraction_per_transport():
+    """Satellite check: one cell per transport, per-op expectations
+    (kinds + byte sizes, replica groups, channel ids, ring pairs)
+    against the lifted graph of the real compiled HLO."""
+    _run("""
+import json
+from repro.analysis.cells import Cell, compile_cell
+
+EXPECT = {
+    # cell id -> sorted multiset of (kind, operand_bytes, result_bytes)
+    "cocoa=persistent": [
+        ("all-reduce", 4, 4), ("all-reduce", 384, 384)],
+    "minibatch_sgd=spark_faithful": [
+        ("all-gather", 1024, 4096), ("all-reduce", 4, 4)],
+    "minibatch_scd=reduce_scatter": [
+        ("all-gather", 96, 384), ("all-reduce", 4, 4),
+        ("reduce-scatter", 384, 96)],
+    "cocoa=compressed:int8": [
+        ("all-gather", 4, 16), ("all-gather", 96, 384),
+        ("all-reduce", 4, 4)],
+    "cocoa=compressed:int4/ring": [
+        ("all-reduce", 4, 4),
+        ("collective-permute", 4, 4), ("collective-permute", 4, 4),
+        ("collective-permute", 4, 4),
+        ("collective-permute", 48, 48), ("collective-permute", 48, 48),
+        ("collective-permute", 48, 48)],
+}
+RING = ((0, 1), (1, 2), (2, 3), (3, 0))
+
+mesh = None
+for cell_id, expect in EXPECT.items():
+    algo, _, spec = cell_id.partition("=")
+    ctx = compile_cell(Cell(algo, spec), mesh=mesh)
+    mesh = ctx.mesh
+    assert ctx.K == 4, ctx.K
+    got = sorted((op.kind, op.operand_bytes, op.result_bytes)
+                 for op in ctx.graph.collectives)
+    assert got == sorted(expect), (cell_id, got)
+    chans = [op.channel_id for op in ctx.graph.collectives]
+    assert None not in chans and len(set(chans)) == len(chans), \\
+        (cell_id, chans)
+    for op in ctx.graph.collectives:
+        if op.kind == "collective-permute":
+            assert op.source_target_pairs == RING, (cell_id, op.name)
+        else:
+            assert op.replica_groups == ((0, 1, 2, 3),), \\
+                (cell_id, op.name, op.replica_groups)
+    print("ok", cell_id)
+print("EXTRACTION-OK")
+""", ndev=4)
