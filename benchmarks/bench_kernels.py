@@ -13,7 +13,8 @@ import numpy as np
 from benchmarks import common
 from repro.bench.registry import BenchContext, benchmark
 from repro.bench.timing import TimingPolicy, time_callable
-from repro.kernels import (quantize_pack_int4, quantize_pack_int4_ref,
+from repro.kernels import (quantize_pack_int2, quantize_pack_int2_ref,
+                           quantize_pack_int4, quantize_pack_int4_ref,
                            quantize_pack_int8, quantize_pack_int8_ref,
                            scd_steps_kernel, scd_steps_ref)
 
@@ -50,7 +51,9 @@ def run(ctx: BenchContext) -> dict:
     quant = {"quant_int8": (jax.jit(quantize_pack_int8_ref),
                             quantize_pack_int8),
              "quant_int4": (jax.jit(quantize_pack_int4_ref),
-                            quantize_pack_int4)}
+                            quantize_pack_int4),
+             "quant_int2": (jax.jit(quantize_pack_int2_ref),
+                            quantize_pack_int2)}
     for L in wl.quant_lengths:
         dv = jnp.asarray(rng.standard_normal(L), jnp.float32)
         for name, (ref_fn, ker_fn) in quant.items():

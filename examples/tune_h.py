@@ -45,7 +45,10 @@ ap.add_argument("--mode", choices=("sync", "stale"), default="sync",
 ap.add_argument("--bandwidth", type=float, default=1e9,
                 help="synthetic link bandwidth in B/s for the comm term "
                      "(default 1 GB/s)")
-ap.add_argument("--codec", choices=("f32", "int8", "int4"), default="f32",
+ap.add_argument("--codec",
+                choices=("f32", "int8", "int4", "int2", "topk",
+                         "ef:int8", "ef:int4", "ef:int2", "ef:topk"),
+                default="f32",
                 help="wire codec for the update exchange: f32 keeps the "
                      "exact persistent psum; int8/int4 run the "
                      "compressed transport with that codec")
@@ -65,8 +68,11 @@ A, b, _ = make_glm_data(m=256, n=768, density=0.2, seed=4)
 # the target tolerance follows the codec's quantization noise floor:
 # int8's absmax grid converges through 1e-3 on this problem, int4's
 # ~17x-coarser grid plateaus near 2e-2, so its tuner runs at the
-# coarse tolerance the codec can actually reach
-EPS = {"f32": 1e-3, "int8": 1e-3, "int4": 5e-2}[args.codec]
+# coarse tolerance the codec can actually reach; int2 and plain topk
+# floor higher still, while the ef: wrapper's error feedback restores
+# the BASE tolerance for every lossy codec it wraps
+EPS = {"f32": 1e-3, "int8": 1e-3, "int4": 5e-2,
+       "int2": 5e-1, "topk": 5e-1}.get(args.codec, 1e-3)  # ef:* = base
 H_REF = 96
 
 # Measure the solver-cost slope once (seconds per local SCD step) at the

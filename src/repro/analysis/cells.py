@@ -39,6 +39,27 @@ REGIME_CELLS = (
     ("minibatch_sgd", "compressed:int8/drop:1@2-4"),
 )
 
+# Codec cells beyond the matrix: the int2/topk base codecs and the
+# stateful ef: wrapper (which widens the drivers' local slot with the
+# per-worker residual) on every algorithm, plus ef: composed with the
+# staleness and elastic-membership regimes and the ring backend — the
+# compositions whose codec-state threading is easiest to get wrong.
+# topk keeps r=0.125 at smoke scale: k = ceil(0.125*96) = 12 of the
+# m = 96 entries, a ratio that actually converges on a 96-vector where
+# the 1% default would keep a single coordinate.
+CODEC_CELLS = (
+    ("cocoa", "compressed:int2"),
+    ("cocoa", "compressed:topk(r=0.125)"),
+    ("cocoa", "compressed:ef:int4"),
+    ("cocoa", "compressed:ef:int2"),
+    ("cocoa", "compressed:ef:topk(r=0.125)"),
+    ("minibatch_scd", "compressed:ef:int4"),
+    ("minibatch_sgd", "compressed:ef:int4"),
+    ("cocoa", "compressed:ef:int4/stale:k=2"),
+    ("cocoa", "compressed:ef:int4/drop:1@2-4"),
+    ("cocoa", "compressed:ef:int4/ring"),
+)
+
 # Collective-backend cells: every transport on the explicit ppermute
 # ring, plus a stale ring (ring bytes are mode-independent like every
 # other transport's).
@@ -87,15 +108,21 @@ def backend_cells() -> tuple[Cell, ...]:
     return tuple(Cell(a, s) for a, s in BACKEND_CELLS)
 
 
+def codec_cells() -> tuple[Cell, ...]:
+    return tuple(Cell(a, s) for a, s in CODEC_CELLS)
+
+
 def all_cells() -> tuple[Cell, ...]:
-    return matrix_cells() + regime_cells() + backend_cells()
+    return (matrix_cells() + regime_cells() + backend_cells()
+            + codec_cells())
 
 
 def resolve_cells(selector: str) -> tuple[Cell, ...]:
     """CLI cell selector: ``all`` | ``matrix`` | ``regime`` | ``backend``
-    or a comma-separated list of ``algo=spec`` entries."""
+    or ``codec``, or a comma-separated list of ``algo=spec`` entries."""
     named = {"all": all_cells, "matrix": matrix_cells,
-             "regime": regime_cells, "backend": backend_cells}
+             "regime": regime_cells, "backend": backend_cells,
+             "codec": codec_cells}
     if selector in named:
         return named[selector]()
     out = []

@@ -13,7 +13,7 @@ Importing this module populates the registry in
 from __future__ import annotations
 
 from repro.analysis.findings import finding, register_rule
-from repro.analysis.traffic import (CODEC_WIRE_DTYPE, QUANTIZED_DTYPES,
+from repro.analysis.traffic import (QUANTIZED_DTYPES, codec_wire_dtype,
                                     derived_round_traffic, padded_len,
                                     quantized_wire_dtypes)
 
@@ -55,12 +55,14 @@ def rule_bytes_match(ctx):
 @register_rule("wire-dtype", "error")
 def rule_wire_dtype(ctx):
     """Codec cells ship only their quantized dtype on the wire (s8 for
-    int8, packed u8 for int4) — no f32 payload escapes."""
+    int8, packed u8 for int4/int2, the same through the ef: wrapper) —
+    no f32 payload escapes. topk legitimately ships f32 values, so it
+    expects (and must show) no quantized dtype."""
     out = []
     if ctx.K < 2:
         return out
     codec = ctx.exchange.scheme.codec.name
-    expect_dt = CODEC_WIRE_DTYPE.get(codec)
+    expect_dt = codec_wire_dtype(codec)
     seen = quantized_wire_dtypes(ctx.graph)
     expect = {expect_dt} if expect_dt else set()
     if seen != expect:
@@ -151,7 +153,7 @@ def rule_f32_intermediate(ctx):
     """f32 HBM tensors materialized between a codec decode and its
     mean/apply (the gather-side dequantize inefficiency in ROADMAP)."""
     codec = ctx.exchange.scheme.codec.name
-    if not CODEC_WIRE_DTYPE.get(codec) or ctx.K < 2:
+    if not codec_wire_dtype(codec) or ctx.K < 2:
         return []
     names = [op.name for op in ctx.graph.collectives
              if op.kind in ("all-gather", "collective-permute")

@@ -33,8 +33,19 @@ SCALAR_METRIC_BYTES = 4
 QUANTIZED_DTYPES = ("s8", "u8", "s4", "u4")
 
 # codec name -> the sub-f32 dtype its payload collective must carry
-# (None: full-precision f32 is the expected wire format)
-CODEC_WIRE_DTYPE = {"f32": None, "int8": "s8", "int4": "u8"}
+# (None: full-precision f32 is the expected wire format). Packed int4
+# AND int2 both travel as u8 bytes (two resp. four codes per byte).
+CODEC_WIRE_DTYPE = {"f32": None, "int8": "s8", "int4": "u8", "int2": "u8"}
+
+
+def codec_wire_dtype(codec: str) -> str | None:
+    """Expected sub-f32 wire dtype for ANY codec grammar name.
+
+    The ``ef:`` wrapper changes what gets encoded (delta + residual),
+    not the wire format — ``ef:int4`` must show the same u8 all-gather
+    as ``int4``. ``topk(r=..)`` ships f32 values + s32 indices, so it
+    (like ``f32``) expects no quantized dtype on the wire."""
+    return CODEC_WIRE_DTYPE.get(codec.removeprefix("ef:"))
 
 
 def derived_round_traffic(graph: CollectiveGraph, exchange, K: int) -> int:

@@ -12,8 +12,9 @@ special case per compression trick.
 *moves* the wire bytes (fused ``xla`` collectives vs an explicit
 ``ppermute`` ring) — behind the pluggable ``CollectiveBackend`` axis.
 """
-from repro.comm.codec import (CODECS, F32Codec, Int4Codec,  # noqa: F401
-                              Int8Codec, UpdateCodec, get_codec)
+from repro.comm.codec import (CODECS, EFWrapper, F32Codec,  # noqa: F401
+                              Int2Codec, Int4Codec, Int8Codec,
+                              TopKCodec, UpdateCodec, get_codec)
 from repro.comm.collectives import (BACKENDS, COLLECTIVE_BACKENDS,  # noqa: F401
                                     CollectiveBackend, RingBackend,
                                     XLABackend, get_backend, padded_len)

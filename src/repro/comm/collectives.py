@@ -318,24 +318,38 @@ def get_backend(backend=None) -> CollectiveBackend:
 # the exchange fabric: transport composition over a backend
 # ---------------------------------------------------------------------------
 def exchange_all_reduce(transport: str, codec: UpdateCodec, update,
-                        axis: str, backend=None):
+                        axis: str, backend=None, state=None):
     """Sum one worker's 1-D update across the mesh axis under the
     transport's exchange pattern, moved by ``backend``'s collectives
     (the sharded drivers' exchange — the ONE place collective mechanics
-    meet the transport x codec surface)."""
+    meet the transport x codec surface).
+
+    ``state`` is this worker's codec-state carry (the error-feedback
+    residual): when given, the encode runs through
+    ``codec.encode_with_state`` and the call returns ``(total,
+    new_state)`` instead of the bare aggregate — stateless codecs hand
+    the zero-length placeholder straight back. Only the encode changes;
+    the collectives (and therefore the HLO traffic) are identical to
+    the stateless path.
+    """
     be = get_backend(backend)
     if transport == "compressed":
-        parts = codec.encode(update)            # e.g. ((L,) int8, scale)
+        if state is None:
+            parts = codec.encode(update)        # e.g. ((L,) int8, scale)
+        else:
+            parts, state = codec.encode_with_state(update, state)
         gathered = tuple(be.all_gather(p, axis) for p in parts)
-        return jnp.sum(codec.decode_stacked(gathered, update.shape[0]),
-                       axis=0)
-    if transport == "spark_faithful":
+        total = jnp.sum(codec.decode_stacked(gathered, update.shape[0]),
+                        axis=0)
+    elif transport == "spark_faithful":
         # collected at the master and re-broadcast, not reduced
         # in-place — identity, but the traffic is real.
-        return jnp.sum(be.all_gather(update, axis), axis=0)
-    if transport == "reduce_scatter":
-        return be.reduce_scatter_gather(update, axis)
-    return be.all_reduce(update, axis)
+        total = jnp.sum(be.all_gather(update, axis), axis=0)
+    elif transport == "reduce_scatter":
+        total = be.reduce_scatter_gather(update, axis)
+    else:
+        total = be.all_reduce(update, axis)
+    return total if state is None else (total, state)
 
 
 def exchange_roundtrip_state(state, axis: str, backend=None):

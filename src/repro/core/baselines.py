@@ -224,9 +224,13 @@ class MinibatchSGD:
 
     def init_state(self):
         """(local, shared) for the distributed drivers: SGD keeps no
-        per-worker persistent state, so ``local`` is an empty block.
-        Stale mode widens the shared slot to (alpha, pending gradient)."""
+        per-worker persistent state, so ``local`` is an empty block
+        (widened with the per-worker residual over the n-length
+        gradient under a stateful ``ef:`` codec). Stale mode widens the
+        shared slot to (alpha, pending gradient)."""
         local = jnp.zeros((self.cfg.K, 0), jnp.float32)
+        local = dist.wrap_local_state(self.exchange, local, self.n,
+                                      self.cfg.K)
         alpha = jnp.zeros(self.n, jnp.float32)
         return local, dist.init_exchange_state(self.exchange, alpha)
 

@@ -210,7 +210,11 @@ class CoCoATrainer:
     def init_state(self):
         alpha = jnp.zeros((self.cfg.K, self.part.n_padded), jnp.float32)
         w = -self.b  # w = A @ 0 - b
-        # stale mode widens the shared slot to (w, pending Delta v queue)
+        # stale mode widens the shared slot to (w, pending Delta v
+        # queue); a stateful (ef:) codec widens the local slot to
+        # (alpha, per-worker residual over the m-length Delta v)
+        alpha = dist.wrap_local_state(self.exchange, alpha, self.m,
+                                      self.cfg.K)
         return alpha, dist.init_exchange_state(self.exchange, w)
 
     def with_H(self, H: int) -> "CoCoATrainer":
@@ -259,8 +263,10 @@ class CoCoATrainer:
                 if target_eps is not None and s <= target_eps:
                     break
         # stale runs carry one unapplied aggregate; absorb it so the
-        # final iterate reflects every round that was computed
+        # final iterate reflects every round that was computed, and
+        # drop the codec-state slot a stateful (ef:) codec carried
         w = dist.finish_run(round_fn, w, last_t)
+        alpha = dist.unwrap_local_state(self.exchange, alpha)
         self.w_final = np.asarray(w)
         self.alpha_final = part_mod.unpack_alpha(np.asarray(alpha),
                                                  self.part, self.n)

@@ -23,10 +23,18 @@ substrate, so this module factors it out:
         codec-encoded before the all-gather and decoded + summed
         locally. The codec is named after a colon — ``compressed:int8``
         (absmax int8 + f32 scale, 4x less traffic than f32),
-        ``compressed:int4`` (two elements per byte, ~8x), or
-        ``compressed:f32`` (the identity codec — the bare transport).
-        Bare ``"compressed"`` aliases ``compressed:int8``, so every
-        pre-codec config keeps its exact behavior.
+        ``compressed:int4`` (two elements per byte, ~8x),
+        ``compressed:int2`` (four per byte, ~16x),
+        ``compressed:topk(r=..)`` (ship only the ceil(r*L) largest
+        entries), or ``compressed:f32`` (the identity codec — the bare
+        transport). Bare ``"compressed"`` aliases ``compressed:int8``,
+        so every pre-codec config keeps its exact behavior. The
+        ``ef:``-prefixed codecs (``compressed:ef:int4`` ...) add error
+        feedback: the encode carries a per-worker residual between
+        rounds, which widens the drivers' ``local`` slot to the
+        ``(local, codec_state)`` pair (build it with
+        :func:`wrap_local_state`) the same way ``stale`` widens
+        ``shared``.
       - ``reduce_scatter``  beyond-paper: the update exchange as an
         explicit ``psum_scatter`` + ``all_gather`` pair (the classic
         ring decomposition of all-reduce) — each worker moves only
@@ -223,21 +231,33 @@ class CommScheme:
 
     # -- aggregation inside shard_map (per-shard view) ---------------------
     def all_reduce(self, update: jax.Array, axis: str,
-                   backend=None) -> jax.Array:
+                   backend=None, state=None):
         """Sum the per-worker 1-D update across the mesh axis, moved by
         ``backend``'s collectives (name, backend object, or ``None`` for
-        the fused ``xla`` fabric — ``repro.comm.collectives``)."""
+        the fused ``xla`` fabric — ``repro.comm.collectives``).
+        ``state`` is this worker's codec-state carry (the error-feedback
+        residual): when given, the return value is ``(total,
+        new_state)`` instead of the bare aggregate."""
         return exchange_all_reduce(self.transport, self.codec, update,
-                                   axis, backend)
+                                   axis, backend, state=state)
 
     # -- aggregation over stacked (K, L) updates (virtual driver) ----------
-    def all_reduce_stacked(self, updates: jax.Array) -> jax.Array:
+    def all_reduce_stacked(self, updates: jax.Array, state=None):
+        """``state`` is the stacked ``(K, ...)`` per-worker codec-state
+        carry; when given the encode runs through the codec's stateful
+        entry point and the call returns ``(total, new_state)``."""
         if self.transport == "compressed":
-            parts = jax.vmap(self.codec.encode)(updates)
-            return jnp.sum(
+            if state is None:
+                parts = jax.vmap(self.codec.encode)(updates)
+            else:
+                parts, state = jax.vmap(
+                    self.codec.encode_with_state)(updates, state)
+            total = jnp.sum(
                 self.codec.decode_stacked(parts, updates.shape[1]),
                 axis=0)
-        return jnp.sum(updates, axis=0)
+        else:
+            total = jnp.sum(updates, axis=0)
+        return total if state is None else (total, state)
 
     # -- persistent-state round trip (sharded driver only) -----------------
     def roundtrip_local_state(self, state: jax.Array, axis: str,
@@ -773,6 +793,27 @@ def init_exchange_state(mode: "ExchangeConfig | ExchangeMode | str", shared,
     return (shared, pending)
 
 
+def wrap_local_state(exchange, local, update_len: int, K: int):
+    """The drivers' ``local`` slot for the given exchange: a stateless
+    codec passes the per-worker local state through untouched; a
+    *stateful* codec (the ``ef:`` error-feedback wrapper) pairs it with
+    the stacked ``(K, update_len)`` per-worker codec-state carry — the
+    residual every round's encode reads and rewrites. The mirror image
+    of :func:`init_exchange_state` widening ``shared`` for ``stale``."""
+    codec = ExchangeConfig.parse(exchange).scheme.codec
+    if not getattr(codec, "stateful", False):
+        return local
+    return local, jnp.stack([codec.init_state(update_len)] * K)
+
+
+def unwrap_local_state(exchange, local):
+    """The bare per-worker local state, dropping the codec-state slot
+    a stateful codec's run carries (the post-run counterpart of
+    :func:`wrap_local_state`; identity for stateless codecs)."""
+    codec = ExchangeConfig.parse(exchange).scheme.codec
+    return local[0] if getattr(codec, "stateful", False) else local
+
+
 def _masked_apply(algo: "RoundAlgorithm", shared, agg, idx):
     """Apply one aggregate under its own round index ``idx``, masked
     out entirely when ``idx < 1`` (the queue slot still holds only the
@@ -947,22 +988,30 @@ def build_virtual_round(algo: RoundAlgorithm, exchange=None, data=None,
     state absorbed through round ``t-1-k``, the oldest pending
     aggregate is applied alongside, and this round's aggregate joins
     the back of the queue. ``round_fn.flush`` absorbs the whole queue
-    after the last round. Workers dropped by the membership schedule
-    contribute exact-zero updates (zeroed before codec encode) and
-    their local state is frozen; when the algorithm averages over
-    workers (``live_reweight``) the aggregate is rescaled by
-    ``K / K_live``. Straggler profiles never enter here — under a
-    bulk-synchronous barrier they change wall-clock, not math.
+    after the last round. Under a *stateful* codec (``ef:``) the
+    ``local`` slot is the ``(local, codec_state)`` pair from
+    :func:`wrap_local_state`: the residual advances at encode time
+    every round, orthogonally to the stale queue (which only delays
+    the aggregate's *apply*). Workers dropped by the membership
+    schedule contribute exact-zero updates (zeroed before codec
+    encode — residual included) and their local state AND residual are
+    frozen; when the algorithm averages over workers
+    (``live_reweight``) the aggregate is rescaled by ``K / K_live``.
+    Straggler profiles never enter here — under a bulk-synchronous
+    barrier they change wall-clock, not math.
     """
     ex = _builder_exchange(exchange, scheme=scheme, mode=mode,
                            owner="build_virtual_round", K=K)
     comm, xmode, membership = ex.scheme, ex.mode, ex.membership
     k = xmode.k
+    stateful = bool(getattr(comm.codec, "stateful", False))
     reweight = (not membership.empty
                 and getattr(algo, "live_reweight", False))
 
     @jax.jit
     def round_fn(local, shared, key, t=1):
+        if stateful:
+            local, cstate = local
         if xmode.stale:
             shared, queue = shared
         keys = jax.random.split(key, K)
@@ -975,11 +1024,23 @@ def build_virtual_round(algo: RoundAlgorithm, exchange=None, data=None,
             upd, local_new = jax.vmap(
                 lambda d, l, k_: algo.local_step(d, l, shared, k_, t))(
                     data, local, keys)
+        cstate_in = cstate if stateful else None
         if not membership.empty:
             mask = membership.live_mask(t, K)
             upd = upd * mask[:, None]
             local_new = _freeze_dropped(local_new, local, mask)
-        total = comm.all_reduce_stacked(upd)
+            if stateful:
+                # a dropped worker contributes an exact-zero encode:
+                # its residual is zeroed alongside the update (zero is
+                # a codec fixed point) and frozen below, so it neither
+                # leaks into the aggregate nor decays while absent
+                cstate_in = cstate_in * mask[:, None]
+        if stateful:
+            total, cstate_new = comm.all_reduce_stacked(upd, cstate_in)
+            if not membership.empty:
+                cstate_new = _freeze_dropped(cstate_new, cstate, mask)
+        else:
+            total = comm.all_reduce_stacked(upd)
         if reweight:
             total = total * (K / jnp.maximum(jnp.sum(mask), 1.0))
         if xmode.stale:
@@ -1003,11 +1064,13 @@ def build_virtual_round(algo: RoundAlgorithm, exchange=None, data=None,
         metric_sum = jnp.sum(jax.vmap(
             lambda d, l: algo.local_metric(d, l, metric_shared))(
                 data, metric_local))
-        return local_new, shared_out, algo.finalize_metric(metric_shared,
+        local_out = (local_new, cstate_new) if stateful else local_new
+        return local_out, shared_out, algo.finalize_metric(metric_shared,
                                                            metric_sum)
 
     round_fn.exchange = ex
     round_fn.mode = xmode
+    round_fn.stateful_codec = stateful
     round_fn.flush = _make_flush(algo, xmode)
     return round_fn
 
@@ -1036,6 +1099,7 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
                            owner="build_sharded_round", K=K)
     comm, xmode, membership = ex.scheme, ex.mode, ex.membership
     k = xmode.k
+    stateful = bool(getattr(comm.codec, "stateful", False))
     reweight = (not membership.empty
                 and getattr(algo, "live_reweight", False))
     axis = mesh.axis_names[0]
@@ -1043,18 +1107,34 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
         assert leaf.shape[0] == K, (leaf.shape, K)
 
     def shard_fn(data_sh, local_sh, keys_sh, shared, t):
+        if stateful:
+            local_sh, cstate_sh = local_sh
+            cstate_k = cstate_sh[0]
         data_k = jax.tree_util.tree_map(lambda x: x[0], data_sh)
         local_k = local_sh[0]
         key_k = jax.random.wrap_key_data(keys_sh[0])
         if xmode.stale:
             shared, queue = shared
         upd, local_new = algo.local_step(data_k, local_k, shared, key_k, t)
+        cstate_in = cstate_k if stateful else None
         if not membership.empty:
             mask = membership.live_mask(t, K)
             mask_k = mask[lax.axis_index(axis)]
             upd = upd * mask_k
             local_new = _freeze_dropped(local_new, local_k, mask_k)
-        total = comm.all_reduce(upd, axis, backend=ex.backend)
+            if stateful:
+                # same contract as the virtual driver: a dropped
+                # worker's residual is zeroed before encode and frozen
+                # after — exact-zero wire contribution, no decay
+                cstate_in = cstate_in * mask_k
+        if stateful:
+            total, cstate_new = comm.all_reduce(upd, axis,
+                                                backend=ex.backend,
+                                                state=cstate_in)
+            if not membership.empty:
+                cstate_new = _freeze_dropped(cstate_new, cstate_k, mask_k)
+        else:
+            total = comm.all_reduce(upd, axis, backend=ex.backend)
         if reweight:
             total = total * (K / jnp.maximum(jnp.sum(mask), 1.0))
         if xmode.stale:
@@ -1074,7 +1154,9 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
         metric_sum = lax.psum(algo.local_metric(data_k, metric_local,
                                                 metric_shared), axis)
         metric = algo.finalize_metric(metric_shared, metric_sum)
-        return local_new[None], shared_out, metric
+        local_out = ((local_new[None], cstate_new[None]) if stateful
+                     else local_new[None])
+        return local_out, shared_out, metric
 
     data_specs = jax.tree_util.tree_map(lambda _: P(axis), data)
     sharded = compat.shard_map(
@@ -1113,6 +1195,7 @@ def build_sharded_round(algo: RoundAlgorithm, exchange=None, data=None,
     round_fn.mesh = mesh
     round_fn.exchange = ex
     round_fn.mode = xmode
+    round_fn.stateful_codec = stateful
     round_fn.flush = _make_flush(algo, xmode)
     return round_fn
 

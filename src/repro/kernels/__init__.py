@@ -4,7 +4,8 @@
 # other hot path is the compressed exchange's wire encode, fused by the
 # quantize+pack kernel (quant.py) whose oracle is the codec layer.
 from repro.kernels.ops import scd_steps_kernel  # noqa: F401
-from repro.kernels.quant import (quantize_pack_int4,  # noqa: F401
-                                 quantize_pack_int8)
-from repro.kernels.ref import (quantize_pack_int4_ref,  # noqa: F401
+from repro.kernels.quant import (quantize_pack_int2,  # noqa: F401
+                                 quantize_pack_int4, quantize_pack_int8)
+from repro.kernels.ref import (quantize_pack_int2_ref,  # noqa: F401
+                               quantize_pack_int4_ref,
                                quantize_pack_int8_ref, scd_steps_ref)

@@ -14,6 +14,10 @@ round, clip, bias and pack in a single grid step:
     pairs with element i + L/2, so "pack" is an elementwise
     ``lo | hi << 4`` of the two sublane rows — no strided gathers) ->
     (1, L/2) uint8 + (1, 1) f32 scale out.
+  * int2: (4, L/4) f32 in (split-quarter pairing: element i pairs with
+    i + L/4, i + 2L/4, i + 3L/4, so "pack" is an elementwise two-bit
+    shift-or of the four sublane rows) -> (1, L/4) uint8 + (1, 1) f32
+    scale out.
 
 The wrappers pad the lane dimension to 128 with zeros (absmax is
 unaffected; padded elements quantize to the zero nibble and are sliced
@@ -30,7 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.comm.codec import INT4_QMAX, INT4_SCALE_DIV, INT8_QMAX
+from repro.comm.codec import (INT2_QMAX, INT2_SCALE_MUL, INT4_QMAX,
+                              INT4_SCALE_DIV, INT8_QMAX)
 from repro.utils import compat
 
 _LANE = 128  # TPU lane width: pad the streamed dimension to a multiple
@@ -52,6 +57,17 @@ def _quant_int4_kernel(x_ref, p_ref, s_ref):
     q = jnp.clip(jnp.round(x / scale), -INT4_QMAX,
                  INT4_QMAX).astype(jnp.int32) + 8    # biased nibbles
     p_ref[...] = (q[0:1, :] | (q[1:2, :] << 4)).astype(jnp.uint8)
+    s_ref[0, 0] = scale
+
+
+def _quant_int2_kernel(x_ref, p_ref, s_ref):
+    x = x_ref[...]                                   # (4, quarter)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax * INT2_SCALE_MUL, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -INT2_QMAX,
+                 INT2_QMAX).astype(jnp.int32) + 2    # biased 2-bit codes
+    p_ref[...] = (q[0:1, :] | (q[1:2, :] << 2) | (q[2:3, :] << 4)
+                  | (q[3:4, :] << 6)).astype(jnp.uint8)
     s_ref[0, 0] = scale
 
 
@@ -98,3 +114,23 @@ def quantize_pack_int4(dv: jax.Array, *, interpret: bool | None = None
         interpret=interpret,
     )(x)
     return packed[0, :half], scale[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_pack_int2(dv: jax.Array, *, interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Fused int2 encode of a 1-D f32 update: ``(packed (ceil(L/4),)
+    uint8, scale)``, bit-identical to ``Int2Codec.encode_ref``."""
+    interpret = compat.default_interpret(interpret)
+    L = dv.shape[0]
+    quarter = -(-L // 4)
+    dv = dv.astype(jnp.float32)
+    dv = jnp.concatenate([dv, jnp.zeros((4 * quarter - L,), dv.dtype)])
+    x = _pad_lanes(dv.reshape(4, quarter))           # split-quarter rows
+    packed, scale = pl.pallas_call(
+        _quant_int2_kernel,
+        out_shape=[jax.ShapeDtypeStruct((1, x.shape[1]), jnp.uint8),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return packed[0, :quarter], scale[0, 0]

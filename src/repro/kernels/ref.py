@@ -12,3 +12,4 @@ from repro.core.solvers import soft_threshold  # noqa: F401
 
 quantize_pack_int8_ref = _CODECS["int8"].encode_ref
 quantize_pack_int4_ref = _CODECS["int4"].encode_ref
+quantize_pack_int2_ref = _CODECS["int2"].encode_ref

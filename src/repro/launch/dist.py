@@ -115,7 +115,10 @@ def run(args) -> dict:
         lambda x: _global_put(x, mesh, P("workers")), tr._data)
     round_fn = dist.build_sharded_round(tr._algo, tr.exchange, data, mesh)
     local, shared = tr.init_state()
-    local = _global_put(local, mesh, P("workers"))
+    # local may be the (local, codec_state) pair of a stateful codec —
+    # every leaf is worker-partitioned, so tree_map the placement
+    local = jax.tree_util.tree_map(
+        lambda x: _global_put(x, mesh, P("workers")), local)
     shared = jax.tree_util.tree_map(
         lambda x: _global_put(x, mesh, P(None)), shared)
 
@@ -133,6 +136,7 @@ def run(args) -> dict:
                                                      shared, t + 1)
         primals.append(float(primal))   # replicated -> readable anywhere
     shared = dist.finish_run(round_fn, shared, last_t)
+    local = dist.unwrap_local_state(tr.exchange, local)
 
     result = {
         "workers": K,

@@ -50,7 +50,9 @@ def main() -> None:
                          "its wire codec drives the delta exchange (the "
                          "backend segment matters on the sharded "
                          "driver / launch.dist)")
-    ap.add_argument("--codec", choices=("f32", "int8", "int4"),
+    ap.add_argument("--codec",
+                    choices=("f32", "int8", "int4", "int2", "topk",
+                             "ef:int8", "ef:int4", "ef:int2", "ef:topk"),
                     default=None,
                     help="DEPRECATED: wire codec alone — use "
                          "--exchange compressed:<codec>")

@@ -1,5 +1,6 @@
 from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig  # noqa: F401
 from repro.optim.local_updates import (LocalUpdatesConfig,  # noqa: F401
-                                       delta_wire_bytes, local_updates_round,
-                                       suggest_H)
+                                       delta_wire_bytes,
+                                       init_delta_codec_state,
+                                       local_updates_round, suggest_H)
 from repro.optim.schedules import cosine_schedule  # noqa: F401

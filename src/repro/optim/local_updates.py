@@ -15,14 +15,18 @@ traffic, profitable exactly when the roofline collective term dominates
 
 Orthogonal to H, ``LocalUpdatesConfig.codec`` picks the wire codec for
 the delta exchange (``repro.comm``): ``f32`` keeps the exact ``pmean``;
-``int8``/``int4`` quantize each leaf's delta per shard (absmax scale,
-the same codecs — and on TPU the same fused Pallas quantize+pack
-kernel — as the linear solvers' ``compressed`` comm scheme), all-gather
-the encoded payloads, and decode + mean locally. Deltas after H small
+any lossy codec (``int8``/``int4``/``int2``/``topk(r=..)`` and their
+``ef:`` error-feedback wrappers) quantizes or sparsifies each leaf's
+delta per shard (the same codec objects — and on TPU the same fused
+Pallas quantize+pack kernels — as the linear solvers' ``compressed``
+comm scheme), all-gathers the encoded payloads, and decodes + means
+locally. Stateful ``ef:`` codecs additionally carry a per-shard,
+per-leaf residual (:func:`init_delta_codec_state`) so the grid error
+feeds back instead of accumulating a bias floor. Deltas after H small
 steps are the natural thing to quantize — their dynamic range is tiny
 next to the parameters', so the absmax grid is fine where quantizing
 raw params would not be; ``average="params"`` therefore rejects a
-non-identity codec.
+lossy codec.
 """
 from __future__ import annotations
 
@@ -33,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.comm import get_codec
+from repro.comm.codec import FP_ITEMSIZE
 
 
 @dataclass(frozen=True)
@@ -44,8 +49,11 @@ class LocalUpdatesConfig:
     codec: str = "f32"         # wire codec for the delta exchange
 
     def __post_init__(self):
-        get_codec(self.codec)  # fail loudly on typos
-        if self.codec != "f32" and self.average != "delta":
+        # parse through the full codec grammar — typos and malformed
+        # compositions (ef:f32, ef:ef:int8, topk(r=0)) raise their
+        # typed errors here, not at trace time
+        codec = get_codec(self.codec)
+        if not codec.lossless and self.average != "delta":
             raise ValueError(
                 f"codec={self.codec!r} requires average='delta': the "
                 f"absmax grid is sized to the small per-round deltas — "
@@ -55,35 +63,76 @@ class LocalUpdatesConfig:
 
 def delta_wire_bytes(params, cfg: LocalUpdatesConfig, K: int) -> int:
     """Modelled bytes on the wire for ONE delta exchange across K data
-    shards — ``2 * K * codec.wire_bytes(leaf_len)`` summed over leaves
-    (each shard sends its encoded delta up and receives the K-stack
-    back), the same accounting the linear drivers' ``compressed``
-    scheme uses. Opt-state sync (always f32) is not included."""
+    shards, per codec path (opt-state sync, always f32, not included):
+
+    * lossless (``f32``): the round runs ``lax.pmean`` — ONE f32
+      all-reduce per leaf, priced master-centrically at
+      ``2 * K * 4 * leaf_len`` (operand up, aggregate back), the same
+      convention :func:`repro.analysis.traffic.derived_round_traffic`
+      applies to the compiled HLO;
+    * lossy codecs: per-shard encode + all-gather of the wire arrays,
+      ``2 * K * codec.wire_bytes(leaf_len)`` — identical accounting to
+      the linear drivers' ``compressed`` scheme (the ``ef:`` wrapper
+      changes what is encoded, not the wire format, so it prices as
+      its base codec).
+
+    A regression test lowers the round per codec and pins this model
+    against the HLO-derived bytes."""
     codec = get_codec(cfg.codec)
-    return sum(2 * K * codec.wire_bytes(leaf.size)
-               for leaf in jax.tree_util.tree_leaves(params))
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        if codec.lossless:
+            total += 2 * K * FP_ITEMSIZE * leaf.size
+        else:
+            total += 2 * K * codec.wire_bytes(leaf.size)
+    return total
 
 
-def _codec_mean(delta: jax.Array, codec, axis_name: str) -> jax.Array:
+def init_delta_codec_state(params, cfg: LocalUpdatesConfig):
+    """Per-leaf codec state for the delta exchange: a pytree of flat
+    f32 residuals (one per params leaf) when ``cfg.codec`` is stateful
+    (the ``ef:`` wrapper), else None. Thread the result through
+    ``local_updates_round(..., codec_state=...)`` round over round —
+    each data shard carries its OWN copy (it is per-worker state, so
+    place it sharded, not replicated)."""
+    codec = get_codec(cfg.codec)
+    if not getattr(codec, "stateful", False):
+        return None
+    return jax.tree.map(lambda leaf: codec.init_state(leaf.size), params)
+
+
+def _codec_mean(delta: jax.Array, codec, axis_name: str, state=None):
     """The compressed replacement for ``lax.pmean`` on one f32 leaf:
     encode this shard's delta, all-gather the wire arrays, decode the
     (K, L) stack locally and average it — the exact collective shape
-    (and byte cost) of the linear drivers' ``compressed`` exchange."""
+    (and byte cost) of the linear drivers' ``compressed`` exchange.
+    With ``state`` (a stateful codec's per-leaf residual) the encode
+    runs through ``encode_with_state`` and the new residual is returned
+    alongside the mean."""
     flat = delta.reshape(-1)
-    parts = codec.encode(flat)
+    if state is None:
+        parts = codec.encode(flat)
+    else:
+        parts, state = codec.encode_with_state(flat, state)
     gathered = tuple(lax.all_gather(p, axis_name) for p in parts)
     dec = codec.decode_stacked(gathered, flat.shape[0])   # (K, L)
-    return jnp.mean(dec, axis=0).reshape(delta.shape)
+    mean = jnp.mean(dec, axis=0).reshape(delta.shape)
+    return mean if state is None else (mean, state)
 
 
 def local_updates_round(step_fn, params, opt_state, batches,
-                        cfg: LocalUpdatesConfig, axis_name: str | None):
+                        cfg: LocalUpdatesConfig, axis_name: str | None,
+                        codec_state=None):
     """Run cfg.H local steps then average across ``axis_name``.
 
-    step_fn(params, opt_state, microbatch) -> (params, opt_state, metrics)
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics)
     must NOT itself synchronize gradients (grad_sync=False in the step
     factory). ``batches`` is a pytree with leading axis H (this shard's
     local microbatches).
+
+    ``codec_state`` (from :func:`init_delta_codec_state`) carries a
+    stateful codec's per-shard residuals; when passed, the return grows
+    a fourth element — the new state to thread into the next round.
     """
     p0 = params
 
@@ -101,12 +150,19 @@ def local_updates_round(step_fn, params, opt_state, batches,
             delta = jax.tree.map(
                 lambda a, b: (a.astype(jnp.float32)
                               - b.astype(jnp.float32)), pH, p0)
-            if cfg.codec == "f32":
+            codec = get_codec(cfg.codec)
+            if codec.lossless:
                 delta = lax.pmean(delta, axis_name)
-            else:
-                codec = get_codec(cfg.codec)
+            elif codec_state is None:
                 delta = jax.tree.map(
                     lambda d: _codec_mean(d, codec, axis_name), delta)
+            else:
+                dl, treedef = jax.tree_util.tree_flatten(delta)
+                sl = jax.tree_util.tree_leaves(codec_state)
+                out = [_codec_mean(d, codec, axis_name, s)
+                       for d, s in zip(dl, sl)]
+                delta = treedef.unflatten([m for m, _ in out])
+                codec_state = treedef.unflatten([s for _, s in out])
             pH = jax.tree.map(lambda p, d: (p.astype(jnp.float32)
                                             + d).astype(p.dtype), p0, delta)
         else:
@@ -118,7 +174,9 @@ def local_updates_round(step_fn, params, opt_state, batches,
                 lambda x: lax.pmean(x.astype(jnp.float32),
                                     axis_name).astype(x.dtype)
                 if jnp.issubdtype(x.dtype, jnp.floating) else x, oH)
-    return pH, oH, metrics
+    if codec_state is None:
+        return pH, oH, metrics
+    return pH, oH, metrics, codec_state
 
 
 def suggest_H(t_compute_per_step: float, t_collective_per_sync: float,

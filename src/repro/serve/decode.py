@@ -6,8 +6,6 @@ seq_len-long persistent state (KV cache / ring buffer / SSM state).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -27,6 +25,12 @@ def greedy_generate(model, params, prompt_tokens, *, max_new: int = 16,
     prompt_tokens: (B, S) int32. Returns (B, max_new) generated ids.
     """
     B, S = prompt_tokens.shape
+    if max_new <= 0:
+        # honor the contract exactly: no tokens requested, none emitted
+        # (the prefill-argmax token below is the FIRST generated token,
+        # so emitting it unconditionally used to return one token too
+        # many here)
+        return jnp.zeros((B, 0), jnp.int32)
     max_len = max_len or (S + max_new)
     extras = batch_extras or {}
     states = model.init_states(params, B, max_len, batch=extras or None)

@@ -276,7 +276,7 @@ def test_registry_has_required_rules():
 def test_cell_selectors():
     assert len(acells.matrix_cells()) == 36
     assert len(acells.all_cells()) == 36 + len(acells.REGIME_CELLS) + \
-        len(acells.BACKEND_CELLS)
+        len(acells.BACKEND_CELLS) + len(acells.CODEC_CELLS)
     sel = acells.resolve_cells("cocoa=compressed:int8/stale")
     assert sel == (acells.Cell("cocoa", "compressed:int8/stale"),)
     with pytest.raises(ValueError):

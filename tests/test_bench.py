@@ -189,7 +189,8 @@ def test_smoke_tier_end_to_end(tmp_path):
     # cells (ring fabric); a regime cell's sharded leg is skipped on a
     # device-starved mesh (membership events name absolute worker
     # indices the smaller mesh cannot host)
-    from benchmarks.bench_drivers import BACKEND_CELLS, REGIME_CELLS
+    from benchmarks.bench_drivers import (BACKEND_CELLS, CODEC_CELLS,
+                                          REGIME_CELLS)
     from repro.core import ExchangeConfig
 
     got = {(r["algorithm"], r["driver"], r["scheme"], r["mode"])
@@ -203,7 +204,7 @@ def test_smoke_tier_end_to_end(tmp_path):
                           "compressed:f32", "compressed:int8",
                           "compressed:int4", "reduce_scatter")
                 for m in ("sync", "stale")}
-    for algo, spec in REGIME_CELLS + BACKEND_CELLS:
+    for algo, spec in REGIME_CELLS + BACKEND_CELLS + CODEC_CELLS:
         ex = ExchangeConfig.parse(spec)
         drivers = (("virtual", "sharded")
                    if ex.membership.empty or k_sh == k_virt
@@ -212,8 +213,9 @@ def test_smoke_tier_end_to_end(tmp_path):
     assert got == expected
     # every compressed row is labelled with its codec
     assert {r["codec"] for r in by["drivers"].rows
-            if r["scheme"].startswith("compressed")} == {"f32", "int8",
-                                                         "int4"}
+            if r["scheme"].startswith("compressed")} == {
+        "f32", "int8", "int4", "int2", "topk(r=0.125)",
+        "ef:int4", "ef:int2", "ef:topk(r=0.125)"}
     # every cell reports modelled bytes sized to the scheme's dtypes —
     # except reduce_scatter and the ring backend on a single-device
     # mesh, whose ring volumes are genuinely zero at K=1

@@ -32,7 +32,7 @@ def test_scheme_rejects_bad_codec_compositions():
     with pytest.raises(ValueError, match="unknown comm scheme"):
         CommScheme.parse("persistant")
     with pytest.raises(ValueError, match="unknown update codec"):
-        CommScheme.parse("compressed:int2")
+        CommScheme.parse("compressed:int3")
     # exact transports move f32 by construction — no codec suffix
     for scheme in ("persistent:int8", "reduce_scatter:int4",
                    "spark_faithful:f32"):
@@ -41,11 +41,36 @@ def test_scheme_rejects_bad_codec_compositions():
 
 
 def test_get_codec_registry():
-    for name in ("f32", "int8", "int4"):
+    for name in ("f32", "int8", "int4", "int2"):
         assert isinstance(get_codec(name), UpdateCodec)
         assert get_codec(name) is CODECS[name]
     with pytest.raises(ValueError, match="unknown update codec"):
         get_codec("bf16")
+
+
+def test_get_codec_grammar_compositions():
+    """The ef:/topk grammar: canonical names, idempotent cache, and the
+    typed rejections (lossless base, nested ef, bad keep ratio) — in
+    BOTH get_codec and the scheme parser."""
+    assert get_codec("ef:int4").name == "ef:int4"
+    assert get_codec("ef:int4").base is get_codec("int4")
+    assert get_codec("ef:int4") is get_codec("ef:int4")  # cached
+    assert get_codec("topk").name == f"topk(r={0.01:g})"
+    assert get_codec("topk(r=0.125)").name == "topk(r=0.125)"
+    assert get_codec("ef:topk(r=0.125)").stateful
+    for parse in (get_codec, lambda n: CommScheme.parse(f"compressed:{n}")):
+        with pytest.raises(ValueError, match="no quantization error"):
+            parse("ef:f32")
+        with pytest.raises(ValueError, match="does not nest"):
+            parse("ef:ef:int8")
+        with pytest.raises(ValueError, match="0 < r <= 1"):
+            parse("topk(r=0)")
+        with pytest.raises(ValueError, match="0 < r <= 1"):
+            parse("topk(r=1.5)")
+        with pytest.raises(ValueError, match=r"topk\(r=<float>\)"):
+            parse("topk(r=lots)")
+        with pytest.raises(ValueError, match="unknown update codec"):
+            parse("int3")
 
 
 # ------------------------------------------------------------ wire bytes
@@ -55,13 +80,23 @@ def test_codec_wire_bytes_formulas(L):
     assert get_codec("int8").wire_bytes(L) == L + 4
     # packed int4: ceil(L/2) payload + the 4-byte f32 scale
     assert get_codec("int4").wire_bytes(L) == -(-L // 2) + 4
+    # packed int2: ceil(L/4) payload + the scale
+    assert get_codec("int2").wire_bytes(L) == -(-L // 4) + 4
+    # topk: (f32 value + i32 index) per kept entry + the f32 threshold
+    k = min(L, max(1, -(-L // 8)))
+    assert get_codec("topk(r=0.125)").wire_bytes(L) == 8 * k + 4
+    # the ef: wrapper changes WHAT is encoded, not the wire format
+    for base in ("int8", "int4", "int2", "topk(r=0.125)"):
+        assert (get_codec(f"ef:{base}").wire_bytes(L)
+                == get_codec(base).wire_bytes(L))
 
 
 @pytest.mark.parametrize("L,K", [(96, 4), (97, 4), (256, 8)])
 def test_compressed_scheme_bytes_scale_with_codec(L, K):
     """2 * K * wire_bytes for every codec under the compressed
     transport — the number the drivers benchmark pins to the HLO."""
-    for codec in ("f32", "int8", "int4"):
+    for codec in ("f32", "int8", "int4", "int2", "topk(r=0.125)",
+                  "ef:int4", "ef:int2"):
         scheme = CommScheme.parse(f"compressed:{codec}")
         assert (scheme.bytes_per_round(L, K)
                 == 2 * K * get_codec(codec).wire_bytes(L))
@@ -107,23 +142,45 @@ def test_sweep_cfg_accepts_codec_schemes():
 # ------------------------------------------------------- local updates
 def test_local_updates_config_validates_codec():
     LocalUpdatesConfig(codec="int8")
+    LocalUpdatesConfig(codec="int2")
+    LocalUpdatesConfig(codec="ef:int4")  # passes the delta-only check
     with pytest.raises(ValueError, match="unknown update codec"):
-        LocalUpdatesConfig(codec="int2")
-    with pytest.raises(ValueError, match="average='delta'"):
-        LocalUpdatesConfig(codec="int8", average="params")
-    LocalUpdatesConfig(codec="f32", average="params")  # identity is fine
+        LocalUpdatesConfig(codec="int3")
+    # grammar errors surface with their typed messages, not a generic one
+    with pytest.raises(ValueError, match="no quantization error"):
+        LocalUpdatesConfig(codec="ef:f32")
+    with pytest.raises(ValueError, match="does not nest"):
+        LocalUpdatesConfig(codec="ef:ef:int8")
+    for lossy in ("int8", "ef:int4", "topk(r=0.125)"):
+        with pytest.raises(ValueError, match="average='delta'"):
+            LocalUpdatesConfig(codec=lossy, average="params")
+    LocalUpdatesConfig(codec="f32", average="params")  # lossless is fine
 
 
 def test_delta_wire_bytes_sums_leaves():
     params = {"w": np.zeros((3, 5), np.float32),
               "b": np.zeros((7,), np.float32)}
     K = 4
+    # f32 runs lax.pmean — one all-reduce of the raw 4-byte elements
+    # per leaf (no wire tuple, no scale), master-centric 2K pricing
     assert (delta_wire_bytes(params, LocalUpdatesConfig(codec="f32"), K)
             == 2 * K * 4 * 22)
     assert (delta_wire_bytes(params, LocalUpdatesConfig(codec="int8"), K)
             == 2 * K * ((15 + 4) + (7 + 4)))
     assert (delta_wire_bytes(params, LocalUpdatesConfig(codec="int4"), K)
             == 2 * K * ((8 + 4) + (4 + 4)))
+    assert (delta_wire_bytes(params, LocalUpdatesConfig(codec="int2"), K)
+            == 2 * K * ((4 + 4) + (2 + 4)))
+    # topk(r=0.125): k = ceil(0.125 * 15) = 2 resp. ceil(0.125 * 7) = 1
+    assert (delta_wire_bytes(
+                params, LocalUpdatesConfig(codec="topk(r=0.125)"), K)
+            == 2 * K * ((8 * 2 + 4) + (8 * 1 + 4)))
+    # ef: prices as its base codec — same wire arrays on the gather
+    for base in ("int8", "int4", "int2", "topk(r=0.125)"):
+        assert (delta_wire_bytes(
+                    params, LocalUpdatesConfig(codec=f"ef:{base}"), K)
+                == delta_wire_bytes(
+                    params, LocalUpdatesConfig(codec=base), K))
 
 
 # ----------------------------------------------------------- suggest_H

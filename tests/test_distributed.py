@@ -41,7 +41,8 @@ def _run(py: str, ndev: int = 8, timeout: int = 560) -> str:
 # codec round-trip property test, ALL codecs (in-process; hypothesis
 # optional)
 # ---------------------------------------------------------------------------
-CODEC_NAMES = ("f32", "int8", "int4")
+CODEC_NAMES = ("f32", "int8", "int4", "int2", "topk(r=0.125)",
+               "ef:int4", "ef:int2", "ef:topk(r=0.125)")
 
 
 @functools.cache
@@ -91,11 +92,21 @@ def _roundtrip_bound(codec_name: str, scales: np.ndarray) -> np.ndarray:
       grid over [-absmax, absmax]): the bound equals absmax/15, which
       is ~8.5x the int8 codec's scale — the price of packing two
       elements per byte.
+    * ``int2`` — scale/2 again (scale = absmax * 2/3, the ternary
+      grid): the same clip-at-the-extreme argument as int4.
+    * ``topk`` — kept entries decode exactly; every dropped entry
+      satisfies |x| <= threshold (the k-th largest magnitude, the
+      codec's "scale" wire part), so the threshold IS the bound.
+    * ``ef:<base>`` — the stateless entry point encodes with a zero
+      residual, i.e. exactly the base codec: the base codec's bound.
 
     The f32 divide/multiply round-trip gets a 1-ulp-ish allowance.
     """
+    codec_name = codec_name.removeprefix("ef:")
     if codec_name == "f32":
         return np.zeros_like(scales)[:, None]
+    if codec_name.startswith("topk"):
+        return scales[:, None] * (1 + 1e-5) + 1e-30
     return 0.5 * scales[:, None] * (1 + 1e-5) + 1e-30
 
 
@@ -182,6 +193,56 @@ def test_codec_roundtrip_edge_values():
     _check_all_codecs(np.ones((1, 1), np.float32))
 
 
+def test_int2_pack_layout_and_wire_bytes():
+    """The packed int2 wire format: ceil(L/4) uint8 payload under
+    split-quarter pairing (element i shares a byte with i + q, i + 2q,
+    i + 3q for q = ceil(L/4), biased codes q+2 in two-bit lanes), plus
+    the 4-byte scale."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import get_codec
+
+    codec = get_codec("int2")
+    for L in (1, 2, 3, 7, 64, 97):
+        dv = jnp.asarray(np.linspace(-1, 1, L), jnp.float32)
+        packed, scale = jax.jit(codec.encode_ref)(dv)
+        quarter = -(-L // 4)
+        assert packed.shape == (quarter,) and packed.dtype == jnp.uint8
+        assert codec.wire_bytes(L) == quarter + 4
+        q = np.round(np.asarray(dv) / float(scale)).clip(-1, 1).astype(int)
+        q = np.concatenate([q, np.zeros(4 * quarter - L, int)]) + 2
+        rows = q.reshape(4, quarter)
+        expect = (rows[0] | (rows[1] << 2) | (rows[2] << 4)
+                  | (rows[3] << 6))
+        assert (np.asarray(packed) == expect).all(), L
+
+
+def test_topk_wire_format_and_threshold():
+    """topk's wire tuple: exact f32 values + int32 indices of the k
+    largest-magnitude entries, threshold (the k-th magnitude) last.
+    Decode scatters the values and drops nothing above the threshold
+    (on honest wire data the threshold mask is the identity)."""
+    import jax.numpy as jnp
+
+    from repro.comm import get_codec
+
+    codec = get_codec("topk(r=0.125)")
+    dv = jnp.asarray([0.0, -5.0, 1.0, 0.25, 3.0, -0.5, 0.0, 2.0,
+                      -1.5, 0.125, 0.0, 4.0, -0.25, 0.75, 0.0, -3.5],
+                     jnp.float32)
+    values, idx, thr = codec.encode(dv)       # k = ceil(0.125*16) = 2
+    assert values.shape == (2,) and idx.dtype == jnp.int32
+    assert set(np.asarray(idx).tolist()) == {1, 11}   # -5.0 and 4.0
+    assert float(thr) == 4.0
+    dec = codec.decode((values, idx, thr), 16)
+    expect = np.zeros(16, np.float32)
+    expect[1], expect[11] = -5.0, 4.0
+    assert np.array_equal(np.asarray(dec), expect)
+    # r is clamped so k never exceeds L
+    assert get_codec("topk(r=1)").wire_bytes(3) == 8 * 3 + 4
+
+
 def test_int4_pack_layout_and_wire_bytes():
     """The packed int4 wire format: ceil(L/2) uint8 payload under
     split-half pairing (element i shares a byte with element
@@ -213,11 +274,13 @@ def test_quantize_pack_kernel_bit_identical_to_oracle():
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels import (quantize_pack_int4, quantize_pack_int4_ref,
+    from repro.kernels import (quantize_pack_int2, quantize_pack_int2_ref,
+                               quantize_pack_int4, quantize_pack_int4_ref,
                                quantize_pack_int8, quantize_pack_int8_ref)
 
     pairs = ((jax.jit(quantize_pack_int8_ref), quantize_pack_int8),
-             (jax.jit(quantize_pack_int4_ref), quantize_pack_int4))
+             (jax.jit(quantize_pack_int4_ref), quantize_pack_int4),
+             (jax.jit(quantize_pack_int2_ref), quantize_pack_int2))
     for L in (1, 2, 7, 96, 128, 257):
         for seed in range(3):
             r = np.random.default_rng(1000 * L + seed)
@@ -668,7 +731,7 @@ def run(codec, lr):
 w_f32 = run("f32", 0.05)
 d_f32 = np.abs(np.asarray(w_f32) - np.asarray(w0)).max()
 assert d_f32 > 0, "reference round did not move"
-for codec, mult in (("int8", 1.0), ("int4", 17.0)):
+for codec, mult in (("int8", 1.0), ("int4", 17.0), ("int2", 85.0)):
     w_c = run(codec, 0.05)
     err = np.abs(np.asarray(w_c) - np.asarray(w_f32)).max()
     # the averaged delta's error is bounded by the mean of per-shard
@@ -678,9 +741,170 @@ for codec, mult in (("int8", 1.0), ("int4", 17.0)):
 # lr=0: every shard's delta is exactly zero -> the decoded mean must be
 # exactly w0 under EVERY codec (the zero-input guarantee through the
 # whole exchange)
-for codec in ("f32", "int8", "int4"):
+for codec in ("f32", "int8", "int4", "int2", "topk(r=0.25)", "ef:int4"):
     w_z = run(codec, 0.0)
     assert np.array_equal(np.asarray(w_z), np.asarray(w0)), codec
+print("OK")
+""", ndev=4)
+
+
+def test_local_updates_delta_bytes_match_hlo():
+    """Satellite of the byte-model repair: lower ONE delta exchange per
+    codec (sync_opt_state off to isolate it) and pin delta_wire_bytes
+    against the HLO-derived bytes — the f32 pmean all-reduce, the
+    quantized all-gathers, topk's live threshold gather (decode consumes
+    it, so XLA cannot dead-code it away), and the ef: state threading
+    all price exactly."""
+    _run("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.optim.local_updates import (LocalUpdatesConfig, local_updates_round,
+                                       delta_wire_bytes, init_delta_codec_state)
+from repro.utils.compat import make_mesh, shard_map
+from repro.analysis.graph import lift_hlo
+from repro.analysis.traffic import derived_round_traffic
+
+K = 4
+mesh = make_mesh((K,), ("data",))
+
+def step_fn(p, o, mb):
+    g = jax.tree.map(lambda x: x * 0.01 + mb["x"].sum() * 0, p)
+    return jax.tree.map(lambda a, b: a - 0.1 * b, p, g), o, {"loss": mb["x"].sum()}
+
+params = {"w": jnp.ones((96,)) * 0.3, "b": jnp.ones((33,)) * -0.2}
+batches = {"x": jnp.zeros((K, 2, 8))}
+
+class Duck:
+    backend = None
+    class scheme: transport = "compressed"
+
+for codec in ("f32", "int8", "int4", "int2", "topk(r=0.125)",
+              "ef:int4", "ef:int2", "ef:topk(r=0.125)"):
+    cfg = LocalUpdatesConfig(H=2, codec=codec, sync_opt_state=False)
+    cstate = init_delta_codec_state(params, cfg)
+    if cstate is None:
+        def run(p, b):
+            pH, oH, m = local_updates_round(step_fn, p, {}, b, cfg, "data")
+            return pH, m["loss"].sum()[None]
+        f = shard_map(run, mesh, in_specs=(P(), P("data")),
+                      out_specs=(P(), P("data")))
+        hlo = jax.jit(f).lower(params, batches).compile().as_text()
+    else:
+        cstateK = jax.tree.map(lambda s: jnp.stack([s] * K), cstate)
+        def run(p, b, cs):
+            cs = jax.tree.map(lambda x: x[0], cs)
+            pH, oH, m, cs = local_updates_round(step_fn, p, {}, b, cfg,
+                                                "data", codec_state=cs)
+            return pH, m["loss"].sum()[None], jax.tree.map(
+                lambda x: x[None], cs)
+        f = shard_map(run, mesh, in_specs=(P(), P("data"), P("data")),
+                      out_specs=(P(), P("data"), P("data")))
+        hlo = jax.jit(f).lower(params, batches, cstateK).compile().as_text()
+    derived = derived_round_traffic(lift_hlo(hlo), Duck, K)
+    model = delta_wire_bytes(params, cfg, K)
+    assert derived == model, (codec, derived, model)
+print("OK")
+""", ndev=4)
+
+
+def test_ef_wrapper_residual_semantics():
+    """EFWrapper unit contracts: (a) the zero-residual entry point is
+    bitwise the base codec; (b) encode_with_state returns residual =
+    (dv + state) - decode(parts); (c) iterating on a constant update
+    keeps the residual bounded while the MEAN decoded update converges
+    to the true value (the error is delayed, not destroyed) — where
+    plain int4 holds a permanent bias on the same input."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import get_codec
+
+    base = get_codec("int4")
+    ef = get_codec("ef:int4")
+    rng = np.random.default_rng(7)
+    dv = jnp.asarray(rng.standard_normal(96) * 0.1, jnp.float32)
+    for pb, pe in zip(base.encode(dv), ef.encode(dv)):
+        assert np.array_equal(np.asarray(pb), np.asarray(pe))
+    state = ef.init_state(96)
+    assert state.shape == (96,) and not np.any(np.asarray(state))
+    parts, new_state = jax.jit(ef.encode_with_state)(dv, state)
+    expect = np.asarray(dv) - np.asarray(base.decode(parts, 96))
+    assert np.allclose(np.asarray(new_state), expect, atol=1e-7)
+
+    @jax.jit
+    def step(state):
+        parts, state = ef.encode_with_state(dv, state)
+        return ef.decode(parts, 96), state
+
+    decoded_sum = jnp.zeros(96)
+    for t in range(200):
+        dec, state = step(state)
+        decoded_sum = decoded_sum + dec
+        assert float(jnp.linalg.norm(state)) < 10.0, t  # bounded residual
+    mean_err = float(jnp.max(jnp.abs(decoded_sum / 200 - dv)))
+    plain_err = float(jnp.max(jnp.abs(base.decode(base.encode(dv), 96) - dv)))
+    assert mean_err < 0.2 * plain_err, (mean_err, plain_err)
+
+
+def test_stateful_codec_widens_local_slot():
+    """wrap_local_state/unwrap_local_state: identity (the SAME object)
+    for stateless codecs — the sync/f32 drivers are untouched by the
+    EF machinery — and a (local, (K, L) zeros) pair for ef: codecs."""
+    import jax.numpy as jnp
+
+    from repro.core import distributed as dist
+
+    local = jnp.ones((4, 7))
+    for spec in ("persistent", "compressed:int4", "compressed:topk(r=0.5)"):
+        assert dist.wrap_local_state(spec, local, 96, 4) is local
+        assert dist.unwrap_local_state(spec, local) is local
+    wrapped = dist.wrap_local_state("compressed:ef:int4", local, 96, 4)
+    assert isinstance(wrapped, tuple) and wrapped[0] is local
+    assert wrapped[1].shape == (4, 96) and not np.any(np.asarray(wrapped[1]))
+    assert dist.unwrap_local_state("compressed:ef:int4", wrapped) is local
+
+
+def test_ef_codec_lifts_int4_floor_virtual_driver():
+    """The headline, at unit-test scale on the virtual driver: plain
+    compressed:int4 floors well above the duality gap compressed:ef:int4
+    reaches on the same problem/rounds — error feedback converts the
+    biased grid's floor into convergence."""
+    from repro.core import CoCoAConfig, CoCoATrainer
+    from repro.data import make_glm_data
+
+    A, b, _ = make_glm_data(m=48, n=96, density=0.3, zipf_a=1.1, seed=3)
+
+    def gap(exchange):
+        tr = CoCoATrainer(CoCoAConfig(K=4, H=24, lam=1.0, solver="scd_ref",
+                                      exchange=exchange, seed=0), A, b)
+        return tr.run(rounds=40, record_every=40).subopt[-1]
+
+    g_int4 = gap("compressed:int4")
+    g_ef = gap("compressed:ef:int4")
+    assert g_ef < 1e-3, g_ef
+    assert g_int4 > 20 * g_ef, (g_int4, g_ef)
+
+
+def test_ef_sharded_matches_virtual_under_regimes():
+    """Codec-state threading through the sharded driver: ef:int4 under
+    plain sync, bounded staleness, and elastic membership must track the
+    virtual driver's trajectory bit-tight (the widened local slot rides
+    the same wrap/unwrap path in both drivers)."""
+    _run("""
+import numpy as np
+from repro.core import CoCoAConfig, CoCoATrainer
+from repro.data import make_glm_data
+A, b, _ = make_glm_data(m=48, n=96, density=0.3, zipf_a=1.1, seed=3)
+for spec in ("compressed:ef:int4", "compressed:ef:int4/stale:k=2",
+             "compressed:ef:int4/drop:1@2-4"):
+    hv = CoCoATrainer(CoCoAConfig(K=4, H=24, lam=1.0, solver="scd_ref",
+                                  exchange=spec, seed=0), A, b) \
+        .run(rounds=10, record_every=2)
+    hs = CoCoATrainer(CoCoAConfig(K=4, H=24, lam=1.0, solver="scd_ref",
+                                  exchange=spec, seed=0), A, b) \
+        .run_sharded(rounds=10, record_every=2)
+    dp = np.max(np.abs(np.asarray(hv.primal) - np.asarray(hs.primal)))
+    assert dp < 1e-5, (spec, dp)
 print("OK")
 """, ndev=4)
 

@@ -97,7 +97,7 @@ def test_exchange_spec_typed_errors():
         ExchangeConfig.parse("persistent/async")
     # a codec typo under a known transport head is a codec error
     with pytest.raises(ValueError, match="unknown update codec"):
-        ExchangeConfig.parse("compressed:int2")
+        ExchangeConfig.parse("compressed:int3")
     with pytest.raises(ValueError, match="duplicate comm-scheme"):
         ExchangeConfig.parse("persistent/compressed")
     with pytest.raises(ValueError, match="duplicate exchange-mode"):

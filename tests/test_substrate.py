@@ -109,3 +109,22 @@ def test_greedy_generate_runs():
     out = greedy_generate(model, params, prompt, max_new=6)
     assert out.shape == (1, 6)
     assert bool(jnp.all((out >= 0) & (out < 512)))
+
+
+def test_greedy_generate_small_max_new():
+    """The max_new contract at the boundary: 0 emits NO tokens (it used
+    to emit the prefill argmax anyway), 1 emits exactly the prefill
+    argmax and agrees with the first token of a longer generation."""
+    from repro.serve import greedy_generate
+    from repro.models import build_model
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    out0 = greedy_generate(model, params, prompt, max_new=0)
+    assert out0.shape == (1, 0)
+    assert out0.dtype == jnp.int32
+    out1 = greedy_generate(model, params, prompt, max_new=1)
+    assert out1.shape == (1, 1)
+    out6 = greedy_generate(model, params, prompt, max_new=6)
+    assert jnp.array_equal(out1, out6[:, :1])
