@@ -68,7 +68,7 @@ WORKLOADS: dict[str, Workload] = {
         m=96, n=256, K=4, density=0.2, eps=1e-3, lam=1.0,
         h_fracs=(0.2, 1.0, 4.0), max_rounds=400,
         decomp_rounds=10, sgd_rounds=400, scaling_ks=(2, 4),
-        kernel_shapes=((64, 64, 64), (128, 64, 128)),
+        kernel_shapes=((64, 64, 64), (128, 64, 128), (512, 64, 384)),
         quant_lengths=(96, 1024),
         reps=1, sgd_step=0.1, sgd_h_grid=(1, 4), rounds_band=(2, 180)),
     "quick": Workload(

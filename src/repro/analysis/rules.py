@@ -148,10 +148,13 @@ def rule_membership_invariant(ctx):
     return []
 
 
-@register_rule("f32-intermediate", "warning")
+@register_rule("f32-intermediate", "error")
 def rule_f32_intermediate(ctx):
     """f32 HBM tensors materialized between a codec decode and its
-    mean/apply (the gather-side dequantize inefficiency in ROADMAP)."""
+    mean/apply — the gather-side dequantize inefficiency closed by the
+    fused decode+reduce path (``repro.kernels.dequant`` on TPU, the
+    sequential oracle elsewhere), promoted from warning to error now
+    that every quantizing cell compiles clean."""
     codec = ctx.exchange.scheme.codec.name
     if not codec_wire_dtype(codec) or ctx.K < 2:
         return []
@@ -159,11 +162,15 @@ def rule_f32_intermediate(ctx):
              if op.kind in ("all-gather", "collective-permute")
              and any(dt in QUANTIZED_DTYPES for dt in op.operand_dtypes)]
     # a decode that materializes the full K-stacked f32 update before
-    # reducing burns K x update_len x 4 bytes of HBM per round
+    # reducing burns K x update_len x 4 bytes of HBM per round; tuple /
+    # get-tuple-element only forward existing buffers (their result
+    # shapes restate every component), so they can't be the
+    # materialization site
     threshold = ctx.K * ctx.update_len * FP_BYTES
     fat = [i for i in ctx.graph.downstream(names, depth=4)
-           if sum(s.bytes for s in i.result_shapes
-                  if s.dtype == "f32") >= threshold]
+           if i.op not in ("tuple", "get-tuple-element")
+           and sum(s.bytes for s in i.result_shapes
+                   if s.dtype == "f32") >= threshold]
     if fat:
         worst = max(fat, key=lambda i: i.result_bytes)
         return [finding(

@@ -339,8 +339,10 @@ def exchange_all_reduce(transport: str, codec: UpdateCodec, update,
         else:
             parts, state = codec.encode_with_state(update, state)
         gathered = tuple(be.all_gather(p, axis) for p in parts)
-        total = jnp.sum(codec.decode_stacked(gathered, update.shape[0]),
-                        axis=0)
+        # fused decode+reduce: the quantized codecs never materialize
+        # the (K, L) f32 stack (Pallas kernel on TPU, sequential oracle
+        # elsewhere — see repro.kernels.dequant for the order contract)
+        total = codec.decode_stacked_sum(gathered, update.shape[0])
     elif transport == "spark_faithful":
         # collected at the master and re-broadcast, not reduced
         # in-place — identity, but the traffic is real.

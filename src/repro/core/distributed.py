@@ -252,9 +252,11 @@ class CommScheme:
             else:
                 parts, state = jax.vmap(
                     self.codec.encode_with_state)(updates, state)
-            total = jnp.sum(
-                self.codec.decode_stacked(parts, updates.shape[1]),
-                axis=0)
+            # fused decode+reduce, same method the sharded exchange
+            # calls — the virtual/sharded bit-identity contract rides
+            # on both drivers emitting the identical decode+sum HLO
+            total = self.codec.decode_stacked_sum(parts,
+                                                  updates.shape[1])
         else:
             total = jnp.sum(updates, axis=0)
         return total if state is None else (total, state)

@@ -1,11 +1,21 @@
 # The paper's compute hot-spot is the local SCD solver, which it
 # offloads to optimized native (C++) modules — here that role is played
 # by a Pallas TPU kernel (scd.py) with a pure-jnp oracle (ref.py). The
-# other hot path is the compressed exchange's wire encode, fused by the
-# quantize+pack kernel (quant.py) whose oracle is the codec layer.
+# other hot paths are the compressed exchange's two wire sides: encode
+# is fused by the quantize+pack kernels (quant.py) and the top-k select
+# kernel (topk.py); decode+reduce of the all-gathered payload is fused
+# by the dequant kernels (dequant.py). Every kernel's oracle is the
+# codec layer, re-exported through ref.py.
+from repro.kernels.dequant import (decode_mean_int2,  # noqa: F401
+                                   decode_mean_int4, decode_mean_int8,
+                                   decode_reduce_int2, decode_reduce_int4,
+                                   decode_reduce_int8)
 from repro.kernels.ops import scd_steps_kernel  # noqa: F401
 from repro.kernels.quant import (quantize_pack_int2,  # noqa: F401
                                  quantize_pack_int4, quantize_pack_int8)
-from repro.kernels.ref import (quantize_pack_int2_ref,  # noqa: F401
+from repro.kernels.ref import (decode_stacked_ref,  # noqa: F401
+                               quantize_pack_int2_ref,
                                quantize_pack_int4_ref,
-                               quantize_pack_int8_ref, scd_steps_ref)
+                               quantize_pack_int8_ref, scd_steps_ref,
+                               topk_select_ref)
+from repro.kernels.topk import topk_select  # noqa: F401

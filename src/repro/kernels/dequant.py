@@ -1,0 +1,196 @@
+"""Pallas TPU kernels: fused decode + reduce for the compressed
+exchange's gather side.
+
+The receive side of every quantizing exchange used to dequantize the
+all-gathered ``(K, wire)`` payload into a ``(K, L)`` f32 stack in HBM
+and then sum it — the ``f32-intermediate`` inefficiency the
+``python -m repro.analysis`` linter flags cell by cell. These kernels
+fuse the whole gather side into one VMEM pass: unpack, bias-shift,
+scale by the per-worker f32 scale and accumulate the f32 sum (or mean)
+worker by worker, so the only f32 tensor that ever exists is the
+``(L,)``-sized accumulator — no K x L f32 HBM round-trip.
+
+Layouts mirror the encode kernels in ``repro.kernels.quant``:
+
+  * int8: (K, L) int8 payload + (K, 1) f32 scales -> (1, L) f32.
+  * int4: (K, L/2) packed bytes -> (2, L/2) f32 split-half rows
+    (element ``i`` pairs with ``i + ceil(L/2)``), reshaped/sliced back
+    to (L,) by the wrapper.
+  * int2: (K, L/4) packed bytes -> (4, L/4) f32 split-quarter rows.
+
+Reduction-order contract: the per-worker rows are accumulated
+SEQUENTIALLY in canonical worker order (k = 0..K-1) and the mean is the
+sum times the f32-rounded ``1/K`` — exactly the op sequence of the
+``decode_stacked_ref`` oracle in ``repro.kernels.ref`` (which is also
+the off-TPU path in ``repro.comm.codec``), so kernel and oracle are
+bit-identical, pinned by tests and the ``kernels`` benchmark. Each
+decoded row is walled off from the accumulate add by a
+``where(isfinite(row), row, 0)`` select (``_no_fma``) so the compiler
+cannot contract ``acc + q*scale`` into an FMA on one path but not the
+other — observed on CPU, where the contracted chain is 1 ulp off the
+strict one and ``lax.optimization_barrier`` does NOT stop it (the
+contraction happens inside one fused loop at codegen, below HLO). The
+select is semantically free: quantized products are finite by
+construction. The wrappers pad the lane dimension to 128
+with zero bytes (padded codes decode to exact zeros under every
+codec's biased grid... int8's zero byte IS code 0; int4/int2 padded
+bytes decode to the biased code -8/-2 times the scale but are sliced
+off before they can be observed), run compiled on TPU and in interpret
+mode everywhere else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128  # TPU lane width: pad the payload's wire dimension
+
+
+def _pad_lanes(x: jax.Array) -> jax.Array:
+    pad = -x.shape[-1] % _LANE
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+    return x
+
+
+def _no_fma(row: jax.Array) -> jax.Array:
+    """Force the ``q*scale`` product to round to f32 before it reaches
+    the accumulate add: routing it through a data-dependent select
+    breaks the ``fadd(fmul, ..)`` pattern the backend would otherwise
+    contract to an FMA (1 ulp off the strict chain, and immune to
+    ``lax.optimization_barrier``, which sits above the fused-loop
+    codegen where the contraction happens). ``isfinite`` is always true
+    for quantized products, so the select never changes a value."""
+    return jnp.where(jnp.isfinite(row), row, jnp.float32(0.0))
+
+
+def _accumulate(rows, mult: float | None):
+    """Sequential f32 accumulation over the K decoded rows — the ONE
+    reduction-order contract shared with the jnp oracle."""
+    acc = _no_fma(rows[0])
+    for r in rows[1:]:
+        acc = acc + _no_fma(r)
+    return acc if mult is None else acc * mult
+
+
+def _dec8_kernel(K: int, mult: float | None, q_ref, s_ref, out_ref):
+    rows = [q_ref[k:k + 1, :].astype(jnp.float32) * s_ref[k, 0]
+            for k in range(K)]
+    out_ref[...] = _accumulate(rows, mult)
+
+
+def _dec4_kernel(K: int, mult: float | None, p_ref, s_ref, out_ref):
+    rows = []
+    for k in range(K):
+        p = p_ref[k:k + 1, :].astype(jnp.int32)
+        q = jnp.concatenate([p & 0xF, p >> 4], axis=0) - 8   # (2, W)
+        rows.append(q.astype(jnp.float32) * s_ref[k, 0])
+    out_ref[...] = _accumulate(rows, mult)
+
+
+def _dec2_kernel(K: int, mult: float | None, p_ref, s_ref, out_ref):
+    rows = []
+    for k in range(K):
+        p = p_ref[k:k + 1, :].astype(jnp.int32)
+        q = jnp.concatenate([p & 0x3, (p >> 2) & 0x3, (p >> 4) & 0x3,
+                             (p >> 6) & 0x3], axis=0) - 2    # (4, W)
+        rows.append(q.astype(jnp.float32) * s_ref[k, 0])
+    out_ref[...] = _accumulate(rows, mult)
+
+
+def _reduce_mult(K: int, mean: bool) -> float | None:
+    """``None`` = plain sum (no trailing multiply); the mean is the sum
+    times the f32-rounded 1/K, same constant the oracle uses."""
+    return (1.0 / K) if mean else None
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("length", "mean", "interpret"))
+def decode_reduce_int8(q: jax.Array, scales: jax.Array, length: int, *,
+                       mean: bool = True, interpret: bool | None = None
+                       ) -> jax.Array:
+    """Fused decode+reduce of an all-gathered int8 payload: ``(K, L)``
+    int8 + ``(K,)`` scales -> the ``(L,)`` f32 sum (or mean) — bit-
+    identical to ``decode_stacked_ref('int8', ...)``."""
+    from repro.utils import compat
+    interpret = compat.default_interpret(interpret)
+    K = q.shape[0]
+    x = _pad_lanes(q)
+    out = pl.pallas_call(
+        functools.partial(_dec8_kernel, K, _reduce_mult(K, mean)),
+        out_shape=jax.ShapeDtypeStruct((1, x.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(x, scales.reshape(K, 1).astype(jnp.float32))
+    return out[0, :length]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("length", "mean", "interpret"))
+def decode_reduce_int4(packed: jax.Array, scales: jax.Array, length: int,
+                       *, mean: bool = True,
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused decode+reduce of an all-gathered packed-int4 payload:
+    ``(K, ceil(L/2))`` uint8 + ``(K,)`` scales -> the ``(L,)`` f32 sum
+    (or mean) — bit-identical to ``decode_stacked_ref('int4', ...)``."""
+    from repro.utils import compat
+    interpret = compat.default_interpret(interpret)
+    K = packed.shape[0]
+    half = packed.shape[1]
+    x = _pad_lanes(packed)
+    out = pl.pallas_call(
+        functools.partial(_dec4_kernel, K, _reduce_mult(K, mean)),
+        out_shape=jax.ShapeDtypeStruct((2, x.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(x, scales.reshape(K, 1).astype(jnp.float32))
+    return out[:, :half].reshape(2 * half)[:length]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("length", "mean", "interpret"))
+def decode_reduce_int2(packed: jax.Array, scales: jax.Array, length: int,
+                       *, mean: bool = True,
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused decode+reduce of an all-gathered packed-int2 payload:
+    ``(K, ceil(L/4))`` uint8 + ``(K,)`` scales -> the ``(L,)`` f32 sum
+    (or mean) — bit-identical to ``decode_stacked_ref('int2', ...)``."""
+    from repro.utils import compat
+    interpret = compat.default_interpret(interpret)
+    K = packed.shape[0]
+    quarter = packed.shape[1]
+    x = _pad_lanes(packed)
+    out = pl.pallas_call(
+        functools.partial(_dec2_kernel, K, _reduce_mult(K, mean)),
+        out_shape=jax.ShapeDtypeStruct((4, x.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(x, scales.reshape(K, 1).astype(jnp.float32))
+    return out[:, :quarter].reshape(4 * quarter)[:length]
+
+
+# codec-name dispatch used by repro.comm.codec's on-TPU path
+DECODE_REDUCE = {
+    "int8": decode_reduce_int8,
+    "int4": decode_reduce_int4,
+    "int2": decode_reduce_int2,
+}
+
+
+def decode_mean_int8(q, scales, length, *, interpret=None):
+    """``decode_reduce_int8(..., mean=True)`` — the bench-cell entry."""
+    return decode_reduce_int8(q, scales, length, mean=True,
+                              interpret=interpret)
+
+
+def decode_mean_int4(packed, scales, length, *, interpret=None):
+    """``decode_reduce_int4(..., mean=True)`` — the bench-cell entry."""
+    return decode_reduce_int4(packed, scales, length, mean=True,
+                              interpret=interpret)
+
+
+def decode_mean_int2(packed, scales, length, *, interpret=None):
+    """``decode_reduce_int2(..., mean=True)`` — the bench-cell entry."""
+    return decode_reduce_int2(packed, scales, length, mean=True,
+                              interpret=interpret)

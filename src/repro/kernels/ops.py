@@ -2,7 +2,10 @@
 
 ``scd_steps_kernel`` matches the contract of the pure-jnp oracle
 ``repro.kernels.ref.scd_steps_ref`` exactly, so the two are drop-in
-interchangeable as CoCoA local solvers (``CoCoAConfig.solver``).
+interchangeable as CoCoA local solvers (``CoCoAConfig.solver``). The
+wrapper's only job is the one XLA gather that turns the random-access
+column visits into the dense (H, m) stream the kernel pipelines;
+padding, lane tiling and block sizing all live in ``scd_pallas``.
 """
 from __future__ import annotations
 
@@ -12,39 +15,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.scd import scd_pallas
-from repro.utils import compat
 
 
 @functools.partial(jax.jit,
                    static_argnames=("sigma", "lam", "eta", "h_blk", "interpret"))
 def scd_steps_kernel(A_k: jax.Array, col_sq: jax.Array, alpha_k: jax.Array,
                      w: jax.Array, idx: jax.Array, *, sigma: float,
-                     lam: float, eta: float, h_blk: int = 128,
+                     lam: float, eta: float, h_blk: int | None = None,
                      interpret: bool | None = None):
     """H SCD steps on one worker's column block via the Pallas kernel.
 
     Same signature/returns as ``repro.core.solvers.scd_steps``:
       A_k (m, n_local), col_sq (n_local,), alpha_k (n_local,), w (m,),
       idx (H,) int32  ->  (delta_v (m,), alpha_new (n_local,)).
+    ``h_blk=None`` lets the kernel size its grid block from the VMEM
+    budget.
     """
-    interpret = compat.default_interpret(interpret)
-    H = idx.shape[0]
-    h_blk = min(h_blk, H)
-    pad = (-H) % h_blk
-    if pad:
-        # Padded steps gather column 0 but carry csq=0 -> exact no-ops.
-        idx_p = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
-        csq_g = jnp.concatenate([col_sq[idx], jnp.zeros((pad,), col_sq.dtype)])
-    else:
-        idx_p, csq_g = idx, col_sq[idx]
-    cols = jnp.take(A_k, idx_p, axis=1).T            # (H', m) pre-gather
-    csq_g = jnp.where(jnp.arange(idx_p.shape[0]) < H, csq_g, 0.0)
-    alpha2d = alpha_k.astype(jnp.float32)[:, None]
-    w2d = w[None, :]
+    cols = jnp.take(A_k, idx, axis=1).T              # (H, m) pre-gather
     alpha_new, rho = scd_pallas(
-        cols, csq_g[:, None].astype(jnp.float32), idx_p[:, None],
-        alpha2d, w2d, sigma=float(sigma),
-        lam_eta=float(lam * eta), lam_l1=float(lam * (1.0 - eta)),
-        h_blk=h_blk, interpret=interpret)
-    delta_v = (rho[0] - w) / jnp.asarray(sigma, rho.dtype)
-    return delta_v.astype(w.dtype), alpha_new[:, 0].astype(alpha_k.dtype)
+        cols, col_sq[idx], idx, alpha_k.astype(jnp.float32), w,
+        sigma=float(sigma), lam_eta=float(lam * eta),
+        lam_l1=float(lam * (1.0 - eta)), h_blk=h_blk,
+        interpret=interpret)
+    delta_v = (rho - w) / jnp.asarray(sigma, rho.dtype)
+    return delta_v.astype(w.dtype), alpha_new.astype(alpha_k.dtype)

@@ -2,9 +2,9 @@
 
 The contracts are identical to the algorithmic sources of truth —
 ``repro.core.solvers.scd_steps`` for the SCD solver and the
-``repro.comm.codec`` encode paths for the fused quantize+pack kernel —
-re-exported here so kernel tests and benchmarks depend only on
-``repro.kernels``.
+``repro.comm.codec`` encode/decode paths for the fused quantize+pack,
+decode+reduce, and top-k select kernels — re-exported here so kernel
+tests and benchmarks depend only on ``repro.kernels``.
 """
 from repro.comm.codec import CODECS as _CODECS
 from repro.core.solvers import scd_steps as scd_steps_ref  # noqa: F401
@@ -13,3 +13,18 @@ from repro.core.solvers import soft_threshold  # noqa: F401
 quantize_pack_int8_ref = _CODECS["int8"].encode_ref
 quantize_pack_int4_ref = _CODECS["int4"].encode_ref
 quantize_pack_int2_ref = _CODECS["int2"].encode_ref
+
+from repro.comm.codec import get_codec as _get_codec
+
+topk_select_ref = _get_codec("topk").encode_ref
+
+
+def decode_stacked_ref(codec: str, parts, length: int, *,
+                       mean: bool = True):
+    """Oracle for the fused decode+reduce kernels: decode the
+    all-gathered ``(K, wire)`` payload one worker row at a time and
+    accumulate SEQUENTIALLY in canonical worker order (mean = sum times
+    the f32-rounded 1/K) — the exact op sequence the Pallas kernels in
+    ``repro.kernels.dequant`` replay, so kernel and oracle are
+    bit-identical."""
+    return _CODECS[codec].decode_reduce_ref(parts, length, mean=mean)

@@ -10,20 +10,32 @@ TPU adaptation (vs the CPU/C++ original):
     inside a TPU kernel would serialize on DMA latency, so the caller
     pre-gathers the H visited columns into a dense (H, m) matrix with a
     single XLA gather; the kernel then *streams* that matrix through
-    VMEM in (H_blk, m) tiles via BlockSpec — sequential-friendly DMA,
-    double-buffered by the Pallas pipeline.
-  * The live state — the residual rho (m,) and the local coordinate
-    block alpha (n_local,) — is kept resident in VMEM across all grid
-    steps (constant index_map outputs), exactly the paper's "persistent
-    local memory" idea pushed down into the memory hierarchy
-    (HBM -> VMEM instead of master -> worker).
-  * State vectors are shaped 2-D ((n,1) / (1,m)) so per-step dynamic
-    indexing lands on the sublane dimension, not the lane dimension.
-  * Reductions (rho . c_j) are VPU work; accumulation in f32 regardless
-    of the streaming dtype.
+    VMEM in (h_blk, S, m_blk) tiles via BlockSpec — sequential-friendly
+    DMA, double-buffered by the Pallas pipeline.
+  * The m dimension is LANE-TILED: rho and each streamed column live as
+    (S, m_blk) = (ceil(m/128), 128) 2-D tiles instead of a single
+    (1, m) row. A (1, m) row occupies one sublane of every (8, 128)
+    f32 register tile — 7/8 of the VPU issue width wasted; the (S, 128)
+    layout packs m across sublanes so the per-step dot and the rho
+    update run at full width. rho is the kernel's resident VMEM f32
+    accumulator (constant index_map), exactly the paper's "persistent
+    local memory" idea pushed down the memory hierarchy.
+  * The per-step scalars — sigma*||c_j||^2, 1/denom and the soft-
+    threshold level lam_l1/denom — are precomputed VECTORIZED outside
+    the kernel and streamed as (h_blk, 1) columns, so the serial
+    H-step loop carries no divides, only mul/add and the reduction.
+  * ``h_blk`` is picked from a VMEM budget (``_auto_h_blk``) when not
+    given: the double-buffered column stream is the dominant tenant, so
+    h_blk ~ budget / (2 * S * 128 * 4), clamped to [8, 512].
+  * H is padded to a multiple of h_blk with csq = 0 tail steps — exact
+    no-ops by construction (the ``scsq > 0`` guard restores alpha and
+    the zero column leaves rho untouched), replacing the former hard
+    ``H % h_blk == 0`` requirement.
 
 The grid is sequential on TPU, which the carried-in-VMEM state relies
-on. Padded tail steps (csq == 0) are exact no-ops by construction.
+on. Runs compiled on TPU and in interpret mode everywhere else (same
+``compat.default_interpret`` convention as the quantize/decode
+kernels).
 """
 from __future__ import annotations
 
@@ -34,9 +46,22 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.utils import compat
 
-def _scd_kernel(sigma: float, lam_eta: float, lam_l1: float, h_blk: int,
-                cols_ref, csq_ref, idx_ref, alpha_in_ref, w_ref,
+_LANE = 128   # TPU lane width: m is tiled to (S, _LANE)
+_VMEM_BUDGET = 4 * 1024 * 1024  # bytes allotted to the column stream
+
+
+def _auto_h_blk(S: int) -> int:
+    """Steps per grid block from the VMEM budget: the double-buffered
+    f32 column stream (2 * h_blk * S * 128 * 4 bytes) is the dominant
+    tenant; clamp to [8, 512] and round down to a sublane multiple."""
+    h = _VMEM_BUDGET // (2 * S * _LANE * 4)
+    return max(8, min(512, (h // 8) * 8))
+
+
+def _scd_kernel(sigma: float, h_blk: int, cols_ref, scsq_ref, dinv_ref,
+                thr_ref, idx_ref, alpha_in_ref, w_ref,
                 alpha_ref, rho_ref):
     """One grid step: h_blk sequential SCD updates on the VMEM state."""
     i = pl.program_id(0)
@@ -48,16 +73,16 @@ def _scd_kernel(sigma: float, lam_eta: float, lam_l1: float, h_blk: int,
 
     def body(s, _):
         j = idx_ref[s, 0]
-        c = cols_ref[s, :].astype(jnp.float32)          # (m,)
-        csq = csq_ref[s, 0].astype(jnp.float32)
+        c = cols_ref[s, :, :].astype(jnp.float32)       # (S, m_blk)
+        scsq = scsq_ref[s, 0]                           # sigma*||c_j||^2
         a = alpha_ref[j, 0]
-        rho = rho_ref[0, :]
-        denom = sigma * csq + lam_eta
-        z_tilde = (sigma * csq * a - jnp.dot(rho, c)) / denom
-        z = jnp.sign(z_tilde) * jnp.maximum(jnp.abs(z_tilde) - lam_l1 / denom, 0.0)
-        z = jnp.where(csq > 0, z, a)
+        rho = rho_ref[...]                              # (S, m_blk)
+        z_tilde = (scsq * a - jnp.sum(rho * c)) * dinv_ref[s, 0]
+        z = jnp.sign(z_tilde) * jnp.maximum(
+            jnp.abs(z_tilde) - thr_ref[s, 0], 0.0)
+        z = jnp.where(scsq > 0, z, a)                   # padded/zero col
         alpha_ref[j, 0] = z
-        rho_ref[0, :] = rho + (sigma * (z - a)) * c
+        rho_ref[...] = rho + (sigma * (z - a)) * c
         return 0
 
     lax.fori_loop(0, h_blk, body, 0)
@@ -67,43 +92,69 @@ def _scd_kernel(sigma: float, lam_eta: float, lam_l1: float, h_blk: int,
                                              "h_blk", "interpret"))
 def scd_pallas(cols: jax.Array, csq: jax.Array, idx: jax.Array,
                alpha: jax.Array, w: jax.Array, *, sigma: float,
-               lam_eta: float, lam_l1: float, h_blk: int = 128,
-               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """Run H = cols.shape[0] SCD steps (H must be a multiple of h_blk).
+               lam_eta: float, lam_l1: float, h_blk: int | None = None,
+               interpret: bool | None = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Run H = cols.shape[0] SCD steps (any H >= 1; the tail is padded
+    with exact no-op steps).
 
     Args:
       cols:  (H, m) pre-gathered columns, streaming dtype (f32/bf16).
-      csq:   (H, 1) squared norms of the gathered columns, f32.
-      idx:   (H, 1) int32 local coordinate index per step.
-      alpha: (n_local, 1) f32 local coordinates.
-      w:     (1, m) round-start shared residual.
+      csq:   (H,) squared norms of the gathered columns.
+      idx:   (H,) int32 local coordinate index per step.
+      alpha: (n_local,) f32 local coordinates.
+      w:     (m,) round-start shared residual, f32.
+      h_blk: steps per grid block; ``None`` picks it from the VMEM
+             budget via ``_auto_h_blk``.
     Returns:
-      (alpha_new (n_local,1) f32, rho (1,m) f32).
+      (alpha_new (n_local,) f32, rho (m,) f32).
     """
+    interpret = compat.default_interpret(interpret)
     H, m = cols.shape
-    assert H % h_blk == 0, (H, h_blk)
+    assert H >= 1, H
     n_local = alpha.shape[0]
-    grid = (H // h_blk,)
-    kernel = functools.partial(_scd_kernel, float(sigma), float(lam_eta),
-                               float(lam_l1), h_blk)
+    S = -(-m // _LANE)
+    mp = S * _LANE
+    if h_blk is None:
+        h_blk = _auto_h_blk(S)
+    h_blk = max(1, min(h_blk, -(-H // 8) * 8))
+    Hp = -(-H // h_blk) * h_blk
+
+    cols_p = jnp.pad(cols, ((0, Hp - H), (0, mp - m)))
+    cols3 = cols_p.reshape(Hp, S, _LANE)
+    idx_p = jnp.pad(idx, (0, Hp - H))[:, None]
+    csq_p = jnp.pad(csq.astype(jnp.float32), (0, Hp - H))
+    # per-step scalars, vectorized out of the serial loop: the kernel
+    # body carries no divides (padded steps hit denom = lam_eta, which
+    # is 0 for pure-l1 problems -> inf/NaN, discarded by the scsq > 0
+    # guard exactly like the zero-column case)
+    scsq = jnp.float32(sigma) * csq_p
+    dinv = 1.0 / (scsq + jnp.float32(lam_eta))
+    thr = jnp.float32(lam_l1) * dinv
+    w3 = jnp.pad(w.astype(jnp.float32), (0, mp - m)).reshape(S, _LANE)
+
+    kernel = functools.partial(_scd_kernel, float(sigma), h_blk)
     alpha_out, rho = pl.pallas_call(
         kernel,
-        grid=grid,
+        grid=(Hp // h_blk,),
         in_specs=[
-            pl.BlockSpec((h_blk, m), lambda i: (i, 0)),      # column stream
-            pl.BlockSpec((h_blk, 1), lambda i: (i, 0)),      # csq stream
-            pl.BlockSpec((h_blk, 1), lambda i: (i, 0)),      # idx stream
-            pl.BlockSpec((n_local, 1), lambda i: (0, 0)),    # alpha (resident)
-            pl.BlockSpec((1, m), lambda i: (0, 0)),          # w (resident)
+            pl.BlockSpec((h_blk, S, _LANE), lambda i: (i, 0, 0)),  # cols
+            pl.BlockSpec((h_blk, 1), lambda i: (i, 0)),   # sigma*csq
+            pl.BlockSpec((h_blk, 1), lambda i: (i, 0)),   # 1/denom
+            pl.BlockSpec((h_blk, 1), lambda i: (i, 0)),   # threshold
+            pl.BlockSpec((h_blk, 1), lambda i: (i, 0)),   # idx stream
+            pl.BlockSpec((n_local, 1), lambda i: (0, 0)),  # alpha in
+            pl.BlockSpec((S, _LANE), lambda i: (0, 0)),   # w (resident)
         ],
         out_specs=[
-            pl.BlockSpec((n_local, 1), lambda i: (0, 0)),    # alpha out
-            pl.BlockSpec((1, m), lambda i: (0, 0)),          # rho out
+            pl.BlockSpec((n_local, 1), lambda i: (0, 0)),  # alpha out
+            pl.BlockSpec((S, _LANE), lambda i: (0, 0)),   # rho accum
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n_local, 1), jnp.float32),
-            jax.ShapeDtypeStruct((1, m), jnp.float32),
+            jax.ShapeDtypeStruct((S, _LANE), jnp.float32),
         ],
         interpret=interpret,
-    )(cols, csq, idx, alpha, w)
-    return alpha_out, rho
+    )(cols3, scsq[:, None], dinv[:, None], thr[:, None], idx_p,
+      alpha.astype(jnp.float32)[:, None], w3)
+    return alpha_out[:, 0], rho.reshape(mp)[:m]

@@ -29,3 +29,18 @@ def make_worker_mesh(K: int):
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip
 ICI_BW = 50e9                     # bytes/s per link
+
+
+def kernel_roofline(flops: float, bytes_moved: float,
+                    seconds: float) -> dict:
+    """Achieved FLOP/s and bytes/s of one kernel cell against the chip
+    peaks above — the per-kernel roofline fractions ``bench_kernels``
+    reports and ``repro.launch.roofline --kernels`` summarizes. Lives
+    here (not roofline.py) so the benchmark can import it without the
+    dry-run module's fake-device environment setup."""
+    return {
+        "achieved_gflops": flops / seconds / 1e9,
+        "achieved_gbps": bytes_moved / seconds / 1e9,
+        "flops_frac_of_peak": flops / seconds / PEAK_FLOPS_BF16,
+        "bw_frac_of_hbm": bytes_moved / seconds / HBM_BW,
+    }

@@ -32,7 +32,7 @@ from repro.configs import ARCHS, SHAPES, get_config  # noqa: E402
 from repro.configs.base import padded_vocab  # noqa: E402
 from repro.launch import build  # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
-                               make_production_mesh)
+                               kernel_roofline, make_production_mesh)
 from repro.analysis.graph import lift_hlo  # noqa: E402
 from repro.models.transformer import _period, layer_plan  # noqa: E402
 
@@ -196,13 +196,66 @@ def roofline_pair(arch: str, shape_name: str, *, chips: int = 256) -> dict:
     return rec
 
 
+def kernel_roofline_summary(bench: dict) -> dict:
+    """Per-kernel roofline fractions from a BENCH_kernels.json dict:
+    every ``model_flops_<cell>`` counter is paired with its
+    ``model_bytes_<cell>`` twin and the cell's measured time, and
+    reported as achieved FLOP/s and bytes/s against the chip peaks.
+    The models are machine-independent (exact-gated in CI); the
+    fractions carry whatever the timing host achieved — interpret-mode
+    CPU numbers in CI, real kernel numbers on TPU."""
+    counters = bench.get("counters", {})
+    timings = bench.get("timings_s", {})
+    cells = {}
+    for name, fl in sorted(counters.items()):
+        if not name.startswith("model_flops_"):
+            continue
+        cell = name[len("model_flops_"):]
+        nbytes = counters.get(f"model_bytes_{cell}")
+        t = timings.get(cell)
+        if nbytes is None or not t:
+            continue
+        cells[cell] = {
+            "time_s": t,
+            "model_flops": float(fl),
+            "model_bytes": float(nbytes),
+            **kernel_roofline(float(fl), float(nbytes), float(t)),
+        }
+    return {"peaks": {"flops_bf16_per_s": PEAK_FLOPS_BF16,
+                      "hbm_bytes_per_s": HBM_BW},
+            "cells": cells}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS))
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--kernels", metavar="BENCH_KERNELS_JSON",
+                    help="write a per-kernel roofline-fraction summary "
+                         "for a BENCH_kernels.json (to --out as a file) "
+                         "instead of the transformer dry-run")
     args = ap.parse_args()
+    if args.kernels:
+        with open(args.kernels) as f:
+            bench = json.load(f)
+        summary = kernel_roofline_summary(bench)
+        out = args.out
+        if os.path.isdir(out) or out.endswith(os.sep):
+            os.makedirs(out, exist_ok=True)
+            out = os.path.join(out, "ROOFLINE_kernels.json")
+        else:
+            os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+        for cell, rec in summary["cells"].items():
+            print(f"{cell:44s} {rec['achieved_gflops']:8.3f} GFLOP/s "
+                  f"({rec['flops_frac_of_peak']:.2e} of peak)  "
+                  f"{rec['achieved_gbps']:8.3f} GB/s "
+                  f"({rec['bw_frac_of_hbm']:.2e} of HBM)")
+        print(f"# -> {out}")
+        return
     pairs = ([(a, s) for a in ARCHS for s in SHAPES] if args.all
              else [(args.arch, args.shape)])
     os.makedirs(args.out, exist_ok=True)

@@ -103,20 +103,21 @@ def init_delta_codec_state(params, cfg: LocalUpdatesConfig):
 
 def _codec_mean(delta: jax.Array, codec, axis_name: str, state=None):
     """The compressed replacement for ``lax.pmean`` on one f32 leaf:
-    encode this shard's delta, all-gather the wire arrays, decode the
-    (K, L) stack locally and average it — the exact collective shape
-    (and byte cost) of the linear drivers' ``compressed`` exchange.
-    With ``state`` (a stateful codec's per-leaf residual) the encode
-    runs through ``encode_with_state`` and the new residual is returned
-    alongside the mean."""
+    encode this shard's delta, all-gather the wire arrays, and average
+    through the codec's fused decode+reduce (Pallas kernel on TPU,
+    sequential oracle elsewhere — no (K, L) f32 stack) — the exact
+    collective shape (and byte cost) of the linear drivers'
+    ``compressed`` exchange. With ``state`` (a stateful codec's
+    per-leaf residual) the encode runs through ``encode_with_state``
+    and the new residual is returned alongside the mean."""
     flat = delta.reshape(-1)
     if state is None:
         parts = codec.encode(flat)
     else:
         parts, state = codec.encode_with_state(flat, state)
     gathered = tuple(lax.all_gather(p, axis_name) for p in parts)
-    dec = codec.decode_stacked(gathered, flat.shape[0])   # (K, L)
-    mean = jnp.mean(dec, axis=0).reshape(delta.shape)
+    mean = codec.decode_stacked_mean(
+        gathered, flat.shape[0]).reshape(delta.shape)
     return mean if state is None else (mean, state)
 
 

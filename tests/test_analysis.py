@@ -237,7 +237,9 @@ def test_rule_f32_intermediate_fires_on_decode():
     g = lift_hlo(corpus("int8_gather.txt"))
     fs = RULES["f32-intermediate"].check(
         _ctx(g, _full_exchange("compressed:int8")))
-    assert len(fs) == 1 and fs[0].severity == "warning"
+    # error severity since the fused decode+reduce kernels closed the
+    # gather side — a reappearing stacked-f32 decode fails the gate
+    assert len(fs) == 1 and fs[0].severity == "error"
     assert "broadcast_multiply_fusion" in fs[0].message
     # exact transports are exempt — f32 on the wire is their format
     assert RULES["f32-intermediate"].check(
@@ -266,8 +268,8 @@ def test_registry_has_required_rules():
     assert required <= set(RULES)
     assert all(RULES[r].severity == "error"
                for r in ("bytes-match", "wire-dtype", "ring-topology",
-                         "membership-invariant", "single-compile"))
-    assert RULES["f32-intermediate"].severity == "warning"
+                         "membership-invariant", "single-compile",
+                         "f32-intermediate"))
     assert max_severity([Finding("x", "warning", "c", "m"),
                          Finding("y", "error", "c", "m")]) == "error"
     assert max_severity([]) is None

@@ -47,11 +47,11 @@ def test_cli_clean_cells_write_json(tmp_path):
     assert {"bytes-match", "wire-dtype", "ring-topology",
             "membership-invariant", "f32-intermediate", "single-compile",
             "jit-module-array", "deprecated-spelling"} <= rules
-    # the int8 cell carries the known gather-side decode warning; the
-    # source lint over src/repro stays clean
-    warn = [f for f in report["findings"] if f["severity"] == "warning"]
-    assert any(f["rule"] == "f32-intermediate"
-               and f["cell"] == "cocoa=compressed:int8" for f in warn)
+    # the int8 cell compiles CLEAN of the gather-side decode finding —
+    # the fused decode+reduce path; any reappearance is an error now —
+    # and the source lint over src/repro stays clean too
+    assert not any(f["rule"] == "f32-intermediate"
+                   for f in report["findings"])
     assert all(f["severity"] != "error" for f in report["findings"])
 
 

@@ -76,7 +76,21 @@ def _codec_paths(codec_name: str):
         mesh, in_specs=P("workers"), out_specs=P("workers")))
     agg_path = jax.jit(
         CommScheme.parse(f"compressed:{codec_name}").all_reduce_stacked)
-    sum_path = jax.jit(lambda rows: jax.numpy.sum(rows, axis=0))
+    # the aggregate reference restates each codec's reduction contract:
+    # quantizing codecs accumulate SEQUENTIALLY in canonical worker
+    # order behind the _no_fma guard (the fused decode+reduce oracle in
+    # repro.kernels.dequant), everything else is the plain jnp.sum
+    if codec_name.removeprefix("ef:") in ("int8", "int4", "int2"):
+        from repro.kernels.dequant import _no_fma
+
+        def _seq_sum(rows):
+            acc = _no_fma(rows[0])
+            for k in range(1, rows.shape[0]):
+                acc = acc + _no_fma(rows[k])
+            return acc
+        sum_path = jax.jit(_seq_sum)
+    else:
+        sum_path = jax.jit(lambda rows: jax.numpy.sum(rows, axis=0))
     scales_path = jax.jit(lambda d: jax.vmap(codec.encode)(d)[-1])
     return vmap_path, shard_path, agg_path, sum_path, scales_path
 
@@ -306,11 +320,17 @@ def test_compressed_int8_bit_identical_to_legacy_quantizer():
     its bare ``compressed`` alias) must aggregate BIT-identically to
     the pre-codec quantizer (``scale = absmax/127 + 1e-30`` inline in
     core/distributed.py) for any nonzero input — the refactor moved
-    the int8 path, it must not have changed it."""
+    the int8 path, it must not have changed it. The fused decode+reduce
+    rework replaced the legacy ``jnp.sum`` over the stacked f32 decode
+    with SEQUENTIAL accumulation in canonical worker order (the
+    ``decode_stacked_ref`` oracle contract), so the legacy reference is
+    restated in that order here — same quantizer, same values, pinned
+    reduction sequence."""
     import jax
     import jax.numpy as jnp
 
     from repro.core.distributed import CommScheme
+    from repro.kernels.dequant import _no_fma
 
     @jax.jit
     def legacy_stacked(updates):
@@ -319,7 +339,11 @@ def test_compressed_int8_bit_identical_to_legacy_quantizer():
             q = jnp.clip(jnp.round(dv / scale), -127, 127).astype(jnp.int8)
             return q, scale
         q, scale = jax.vmap(q1)(updates)
-        return jnp.sum(q.astype(jnp.float32) * scale[:, None], axis=0)
+        stack = q.astype(jnp.float32) * scale[:, None]
+        acc = _no_fma(stack[0])
+        for k in range(1, stack.shape[0]):
+            acc = acc + _no_fma(stack[k])
+        return acc
 
     aliased = jax.jit(CommScheme.parse("compressed").all_reduce_stacked)
     named = jax.jit(CommScheme.parse("compressed:int8").all_reduce_stacked)
